@@ -1,0 +1,117 @@
+"""Shared benchmark harness: paper-table reproductions at simulation scale.
+
+Every benchmark follows the same recipe (DESIGN.md §7): train the paper's
+Conformer (reduced, CPU-trainable) or a small LM under the *faithful*
+federated simulation (per-client PPQ, transport re-quantization) and compare
+FP32 vs OMC on loss curves + exact byte accounting — WER -> loss parity
+(no LibriSpeech offline).
+
+Budget knobs (BENCH_ROUNDS etc.) keep ``python -m benchmarks.run`` tractable
+on one CPU core; raise them for tighter curves.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import get_arch
+from repro.core.omc import OMCConfig
+from repro.core.policy import QuantizePolicy
+from repro.core.store import decompress_tree
+from repro.data.synthetic import make_frame_task
+from repro.federated import simulate
+from repro.federated.cohort import CohortPlan
+from repro.federated.state import compress_params
+from repro.models import conformer as cf
+from repro.models.common import IDENTITY_MAT
+from repro.models.registry import get_family
+
+BENCH_ROUNDS = int(os.environ.get("BENCH_ROUNDS", 24))
+BENCH_CLIENTS = int(os.environ.get("BENCH_CLIENTS", 8))
+BENCH_COHORT = int(os.environ.get("BENCH_COHORT", 4))
+BENCH_BATCH = int(os.environ.get("BENCH_BATCH", 4))
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "bench")
+
+
+def conformer_setup(iid: bool = True, domain: int = 0, seed: int = 0):
+    arch = get_arch("conformer_s")
+    cfg = arch.smoke_config()
+    task = make_frame_task(d_in=cfg.d_in, n_classes=cfg.n_classes, seq_len=32,
+                           num_clients=BENCH_CLIENTS, iid=iid, seed=seed,
+                           domain=domain)
+    data_fn = lambda c, r, s: task.batch(c, r, s, BENCH_BATCH)
+    eval_batches = [task.batch(100 + i, 10_000, 0, BENCH_BATCH) for i in range(4)]
+    return cf, cfg, task, data_fn, eval_batches
+
+
+def eval_loss(family, cfg, params, batches) -> float:
+    f = jax.jit(lambda p, b: family.loss(cfg, p, b, IDENTITY_MAT))
+    return float(sum(f(params, b) for b in batches) / len(batches))
+
+
+def run_fl(family, cfg, omc: OMCConfig, data_fn, eval_batches,
+           rounds: int = None, seed: int = 0, local_steps: int = 1,
+           client_lr: float = 0.1) -> Dict:
+    rounds = rounds or BENCH_ROUNDS
+    sim = simulate.SimConfig(local_steps=local_steps, client_lr=client_lr)
+    plan = CohortPlan(num_clients=BENCH_CLIENTS, cohort_size=BENCH_COHORT)
+    t0 = time.time()
+    evals = []
+
+    def eval_fn(params_f32, r):
+        return eval_loss(family, cfg, params_f32, eval_batches)
+
+    params, hist = simulate.run_training(
+        family, cfg, omc, sim, plan, data_fn, jax.random.PRNGKey(seed),
+        num_rounds=rounds, eval_fn=eval_fn,
+        eval_every=max(rounds // 6, 1),
+    )
+    dt = time.time() - t0
+    final_eval = eval_loss(family, cfg, decompress_tree(params), eval_batches)
+    return dict(
+        fmt=omc.fmt.name,
+        pvt=omc.pvt,
+        fraction=omc.quantize_fraction,
+        weights_only=omc.policy.weights_only,
+        rounds=rounds,
+        final_eval=final_eval,
+        train_curve=[h["loss"] for h in hist],
+        eval_curve=[h.get("eval") for h in hist if "eval" in h],
+        wall_s=round(dt, 1),
+        rounds_per_min=round(60 * rounds / dt, 2),
+    )
+
+
+def bytes_summary(family, cfg, omc: OMCConfig) -> Dict:
+    from repro.core.omc import bytes_report
+    params = family.init(jax.random.PRNGKey(0), cfg)
+    return bytes_report(params, omc)
+
+
+def save_result(name: str, payload) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def print_table(title: str, rows: List[Dict], cols: List[str]):
+    print(f"\n== {title} ==")
+    widths = {c: max(len(c), max((len(_fmt(r.get(c))) for r in rows),
+                                 default=0)) for c in cols}
+    print("  ".join(c.ljust(widths[c]) for c in cols))
+    for r in rows:
+        print("  ".join(_fmt(r.get(c)).ljust(widths[c]) for c in cols))
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4f}"
+    return str(v)

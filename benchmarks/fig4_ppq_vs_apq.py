@@ -1,0 +1,23 @@
+"""Paper Fig. 4: PPQ@11-bit (90%%) vs APQ@13-bit (100%%) formats."""
+
+from repro.core.omc import OMCConfig
+
+from .common import conformer_setup, print_table, run_fl, save_result
+
+
+def run():
+    fam, cfg, task, data_fn, evalb = conformer_setup(iid=True)
+    variants = [
+        ("PPQ S1E3M7 @90%", OMCConfig.parse("S1E3M7", quantize_fraction=0.9)),
+        ("APQ S1E3M9", OMCConfig.parse("S1E3M9", quantize_fraction=1.0)),
+        ("APQ S1E4M8", OMCConfig.parse("S1E4M8", quantize_fraction=1.0)),
+        ("APQ S1E5M7", OMCConfig.parse("S1E5M7", quantize_fraction=1.0)),
+    ]
+    rows = []
+    for name, omc in variants:
+        r = run_fl(fam, cfg, omc, data_fn, evalb)
+        r["variant"] = name
+        rows.append(r)
+    print_table("Fig 4: PPQ@11b vs APQ@13b", rows, ["variant", "final_eval"])
+    save_result("fig4_ppq_vs_apq", rows)
+    return rows

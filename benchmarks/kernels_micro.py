@@ -1,0 +1,42 @@
+"""Kernel micro-bench: ref-vs-interpret correctness timing + bytes math."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import FloatFormat
+from repro.kernels import ops, ref
+
+from .common import print_table, save_result
+
+
+def _time(f, *args, n=5):
+    f(*args).block_until_ready() if hasattr(f(*args), "block_until_ready") \
+        else jax.block_until_ready(f(*args))
+    t0 = time.time()
+    for _ in range(n):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / n
+
+
+def run():
+    rows = []
+    for fmt_s in ("S1E3M7", "S1E4M14"):
+        fmt = FloatFormat.parse(fmt_s)
+        x = jax.random.normal(jax.random.PRNGKey(0), (1024, 1024))
+        t_q = _time(lambda a: ops.quantize(a, fmt), x)
+        codes = ops.quantize(x, fmt)
+        t_d = _time(lambda c: ops.dequantize(c, fmt), codes)
+        a = jax.random.normal(jax.random.PRNGKey(1), (256, 1024))
+        t_mm = _time(lambda a_, c: ops.dequant_matmul(a_, c, fmt), a, codes)
+        gbps = 2 * x.size * 4 / t_q / 1e9
+        rows.append(dict(fmt=fmt_s, quant_ms=round(t_q * 1e3, 2),
+                         dequant_ms=round(t_d * 1e3, 2),
+                         dqmm_ms=round(t_mm * 1e3, 2),
+                         host_gbps=round(gbps, 2)))
+    print_table("Kernel micro-bench (host reference path)", rows,
+                ["fmt", "quant_ms", "dequant_ms", "dqmm_ms", "host_gbps"])
+    save_result("kernels_micro", rows)
+    return rows

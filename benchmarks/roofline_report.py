@@ -1,0 +1,35 @@
+"""Aggregate the dry-run JSONs into the §Roofline table."""
+
+import glob
+import json
+import os
+
+from .common import print_table, save_result
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def run():
+    rows = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*_pod*.json"))):
+        d = json.load(open(path))
+        r = d["roofline"]
+        base = os.path.basename(path)
+        tag = base.split("_pod", 1)[1].replace(".json", "").lstrip("_") or "base"
+        rows.append(dict(
+            tag=tag,
+            arch=d["arch"], shape=d["shape"],
+            mesh="x".join(map(str, d["mesh"])),
+            fmt=d["fmt"],
+            compute_ms=round(r["compute_s"] * 1e3, 1),
+            memory_ms=round(r["memory_s"] * 1e3, 1),
+            coll_ms=round(r["collective_s"] * 1e3, 1),
+            dominant=r["dominant"],
+            useful=round(r["useful_flops_ratio"], 2),
+        ))
+    print_table("Roofline terms per (arch x shape x mesh)", rows,
+                ["arch", "shape", "mesh", "fmt", "tag", "compute_ms",
+                 "memory_ms", "coll_ms", "dominant", "useful"])
+    save_result("roofline_report", rows)
+    return rows

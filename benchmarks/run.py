@@ -1,0 +1,36 @@
+"""Benchmark driver: one entry per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [names...]
+Environment: BENCH_ROUNDS / BENCH_CLIENTS / BENCH_COHORT / BENCH_BATCH.
+"""
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import (fig3_pvt_stability, fig4_ppq_vs_apq, kernels_micro,
+                   memory_measured, roofline_report, table1_iid,
+                   table2_adaptation, table3_noniid, table4_ablation)
+
+    all_benches = {
+        "table1_iid": table1_iid.run,
+        "table2_adaptation": table2_adaptation.run,
+        "table3_noniid": table3_noniid.run,
+        "table4_ablation": table4_ablation.run,
+        "fig3_pvt_stability": fig3_pvt_stability.run,
+        "fig4_ppq_vs_apq": fig4_ppq_vs_apq.run,
+        "memory_measured": memory_measured.run,
+        "kernels_micro": kernels_micro.run,
+        "roofline_report": roofline_report.run,
+    }
+    names = sys.argv[1:] or list(all_benches)
+    for name in names:
+        t0 = time.time()
+        print(f"\n######## {name} ########")
+        all_benches[name]()
+        print(f"[{name}: {time.time() - t0:.0f}s]")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Paper Table 1: Non-Streaming Conformer on IID LibriSpeech (surrogate).
+
+FP32 (S1E8M23) vs OMC S1E4M14: comparable loss at 64%% parameter
+memory/communication, with round-speed overhead <= ~10%%.
+"""
+
+from repro.core.omc import OMCConfig
+
+from .common import (bytes_summary, conformer_setup, print_table, run_fl,
+                     save_result)
+
+
+def run():
+    import dataclasses
+    fam, cfg_s, task, data_fn, evalb = conformer_setup(iid=True)
+    cfg = dataclasses.replace(cfg_s, window=None, causal_conv=False)  # non-streaming
+    rows = []
+    for fmt in ("S1E8M23", "S1E4M14"):
+        omc = OMCConfig.parse(fmt)
+        r = run_fl(fam, cfg, omc, data_fn, evalb)
+        byt = bytes_summary(fam, cfg, omc)
+        r["mem_ratio"] = byt["packed_ratio"]
+        rows.append(r)
+    base = rows[0]
+    for r in rows:
+        r["speed_pct"] = round(100 * r["rounds_per_min"] /
+                               max(base["rounds_per_min"], 1e-9))
+        r["mem_pct"] = round(100 * r["mem_ratio"])
+    print_table("Table 1: Non-Streaming Conformer, IID",
+                rows, ["fmt", "final_eval", "mem_pct", "speed_pct",
+                       "rounds_per_min"])
+    save_result("table1_iid", rows)
+    return rows

@@ -1,0 +1,23 @@
+"""Paper Table 3: Non-Streaming Conformer on Non-IID LibriSpeech (surrogate).
+
+Same formats as Table 1, with the per-speaker (non-IID) partition.
+"""
+
+import dataclasses
+
+from repro.core.omc import OMCConfig
+
+from .common import conformer_setup, print_table, run_fl, save_result
+
+
+def run():
+    fam, cfg_s, task, data_fn, evalb = conformer_setup(iid=False)
+    cfg = dataclasses.replace(cfg_s, window=None, causal_conv=False)
+    rows = []
+    for fmt in ("S1E8M23", "S1E4M14"):
+        r = run_fl(fam, cfg, OMCConfig.parse(fmt), data_fn, evalb)
+        rows.append(r)
+    print_table("Table 3: Non-Streaming Conformer, Non-IID",
+                rows, ["fmt", "final_eval"])
+    save_result("table3_noniid", rows)
+    return rows

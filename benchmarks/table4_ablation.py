@@ -1,0 +1,37 @@
+"""Paper Table 4: ablation — quantize -> +PVT -> +weights-only -> +PPQ.
+
+Reproduces the ordering: raw S1E3M7 hurts, each mechanism recovers loss.
+"""
+
+import dataclasses
+
+from repro.core.omc import OMCConfig
+from repro.core.policy import QuantizePolicy
+
+from .common import conformer_setup, print_table, run_fl, save_result
+
+
+def run():
+    fam, cfg, task, data_fn, evalb = conformer_setup(iid=True)
+    all_params_policy = QuantizePolicy(weights_only=False, min_ndim=0,
+                                       min_size=1)
+    variants = [
+        ("fp32", OMCConfig.parse("S1E8M23")),
+        ("quant", OMCConfig.parse("S1E3M7", pvt=False, quantize_fraction=1.0,
+                                  policy=all_params_policy)),
+        ("quant+pvt", OMCConfig.parse("S1E3M7", pvt=True,
+                                      quantize_fraction=1.0,
+                                      policy=all_params_policy)),
+        ("quant+pvt+weights", OMCConfig.parse("S1E3M7", pvt=True,
+                                              quantize_fraction=1.0)),
+        ("quant+pvt+weights+ppq", OMCConfig.parse("S1E3M7", pvt=True,
+                                                  quantize_fraction=0.9)),
+    ]
+    rows = []
+    for name, omc in variants:
+        r = run_fl(fam, cfg, omc, data_fn, evalb)
+        r["variant"] = name
+        rows.append(r)
+    print_table("Table 4: ablation (S1E3M7)", rows, ["variant", "final_eval"])
+    save_result("table4_ablation", rows)
+    return rows

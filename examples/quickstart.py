@@ -1,0 +1,36 @@
+"""Quickstart: OMC in 40 lines — compress, train a round, inspect savings.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.omc import OMCConfig
+from repro.data.synthetic import make_lm_task
+from repro.federated.round import make_round_fn
+from repro.federated.state import init_state, state_bytes_report
+from repro.models import transformer as tr
+from repro.optim import fedavg
+
+# a small GQA transformer LM
+cfg = tr.TransformerConfig(n_layers=4, d_model=128, n_heads=8, n_kv_heads=4,
+                           d_ff=256, vocab=512)
+
+# Online Model Compression: 11-bit S1E3M7 storage, per-variable
+# transformation, weights-only policy (paper §2)
+omc = OMCConfig.parse("S1E3M7")
+
+state = init_state(jax.random.PRNGKey(0), tr, cfg, omc, fedavg(1.0))
+report = state_bytes_report(state.params)
+print(f"parameters:       {report['num_params'] / 1e6:.2f} M")
+print(f"storage (u16):    {report['container_ratio']:.0%} of FP32")
+print(f"wire (19-bit):    {report['packed_ratio']:.0%} of FP32")
+
+# one federated round = compressed transport -> local step -> aggregate ->
+# re-compress; all inside a single jit
+task = make_lm_task(vocab=512, seq_len=64, num_clients=8)
+round_fn = jax.jit(make_round_fn(tr, cfg, omc, fedavg(1.0), client_lr=0.05))
+for r in range(10):
+    state, metrics = round_fn(state, task.batch(r % 8, r, 0, 8))
+    print(f"round {r}: loss={float(metrics['loss']):.4f}")

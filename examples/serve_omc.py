@@ -1,0 +1,18 @@
+"""Serve a model with OMC-compressed weights and batched requests.
+
+Weights live compressed (u16 codes) and are decompressed layer-by-layer
+inside the jitted decode step — the serving-side realization of the paper's
+storage model.
+
+    PYTHONPATH=src python examples/serve_omc.py
+"""
+
+import subprocess
+import sys
+
+subprocess.run(
+    [sys.executable, "-m", "repro.launch.serve",
+     "--arch", "qwen2.5-3b", "--smoke", "--batch", "4",
+     "--prompt-len", "32", "--gen", "16", "--fmt", "S1E3M7"],
+    check=True,
+)

@@ -1,0 +1,20 @@
+"""End-to-end driver: federated-train a ~100M-parameter model.
+
+The full conformer_s config is ~130M parameters (the paper's streaming
+Conformer).  On real hardware run it as-is; on this CPU container pass
+--smoke for the reduced config (the default below keeps CPU feasibility).
+
+    PYTHONPATH=src python examples/train_100m.py [--full]
+"""
+
+import subprocess
+import sys
+
+full = "--full" in sys.argv
+args = [sys.executable, "-m", "repro.launch.train",
+        "--arch", "conformer_s", "--rounds", "200" if full else "30",
+        "--batch", "8", "--fmt", "S1E3M7",
+        "--ckpt-dir", "/tmp/omc_train_100m", "--ckpt-every", "10"]
+if not full:
+    args.append("--smoke")
+subprocess.run(args, check=True)

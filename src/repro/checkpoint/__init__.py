@@ -1,0 +1,8 @@
+"""Atomic, reshardable checkpoints of federated server state."""
+
+from .ckpt import (
+    latest_checkpoint,
+    restore_state,
+    save_state,
+    gc_checkpoints,
+)

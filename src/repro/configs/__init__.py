@@ -1,0 +1,4 @@
+"""Assigned-architecture configs (``--arch <id>``) + the paper's Conformer."""
+
+from .registry import ARCHS, get_arch, list_archs
+from .shapes import SHAPES, Shape

@@ -1,0 +1,28 @@
+"""conformer_s — the paper's own model family (streaming Conformer, §3.1).
+
+Used by the paper-table benchmarks at reduced scale (CPU-trainable); the
+full-size streaming Conformer is ~130M params (17L d=512 8H).  Not part of
+the 40 assigned dry-run cells.
+"""
+
+from repro.models.conformer import ConformerConfig
+
+ID = "conformer_s"
+FAMILY = "conformer"
+LONG_CONTEXT_OK = False
+
+
+def config() -> ConformerConfig:
+    """~130M streaming Conformer (paper's production-grade variant)."""
+    return ConformerConfig(
+        n_layers=17, d_model=512, n_heads=8, d_ff=2048, n_classes=1024,
+        d_in=80, conv_kernel=32, window=128, causal_conv=True,
+    )
+
+
+def smoke_config() -> ConformerConfig:
+    """CPU-benchmark scale (paper-table reproductions train this)."""
+    return ConformerConfig(
+        n_layers=2, d_model=48, n_heads=4, d_ff=96, n_classes=32,
+        d_in=16, conv_kernel=4, window=16, causal_conv=True,
+    )

@@ -1,0 +1,30 @@
+"""internvl2-1b [vlm]: 24L d=896 14H (GQA kv=2) ff=4864 vocab=151655.
+
+InternViT frontend + Qwen2-0.5B LM backbone.  The ViT is a STUB per the
+brief: ``input_specs`` provides 1024 precomputed patch embeddings prepended
+to the token stream (``prefix_embeds``).  [arXiv:2404.16821; hf]
+Full attention -> ``long_500k`` SKIPPED.
+"""
+
+from repro.models.transformer import TransformerConfig
+
+ID = "internvl2-1b"
+FAMILY = "vlm"
+LONG_CONTEXT_OK = False
+N_PATCHES = 1024
+
+
+def config() -> TransformerConfig:
+    return TransformerConfig(
+        n_layers=24, d_model=896, n_heads=14, n_kv_heads=2, d_ff=4864,
+        vocab=151_808,  # padded from 151655 to a 256-multiple (embedding sharding) head_dim=64, qkv_bias=True, tie_embeddings=True,
+        prefix_embeds=N_PATCHES,
+    )
+
+
+def smoke_config() -> TransformerConfig:
+    return TransformerConfig(
+        n_layers=2, d_model=56, n_heads=7, n_kv_heads=1, d_ff=128,
+        vocab=512, head_dim=8, qkv_bias=True, tie_embeddings=True,
+        prefix_embeds=8,
+    )

@@ -1,0 +1,28 @@
+"""seamless-m4t-medium [audio]: 12+12L d=1024 16H (MHA kv=16) ff=4096 vocab=256206.
+
+Encoder-decoder; the audio frontend is a STUB (``input_specs`` provides
+precomputed frame embeddings).  Decoder length = seq_len // 4 (speech-to-
+text ratio, DESIGN.md §6).  [arXiv:2308.11596; hf]  Full attention ->
+``long_500k`` SKIPPED.
+"""
+
+from repro.models.encdec import EncDecConfig
+
+ID = "seamless-m4t-medium"
+FAMILY = "encdec"
+LONG_CONTEXT_OK = False
+
+
+def config() -> EncDecConfig:
+    return EncDecConfig(
+        n_enc_layers=12, n_dec_layers=12, d_model=1024, n_heads=16,
+        n_kv_heads=16, d_ff=4096,
+        vocab=256_256,  # padded from 256206 to a 256-multiple (embedding sharding) dec_ratio=4,
+    )
+
+
+def smoke_config() -> EncDecConfig:
+    return EncDecConfig(
+        n_enc_layers=2, n_dec_layers=2, d_model=64, n_heads=4,
+        n_kv_heads=4, d_ff=128, vocab=512, dec_ratio=4,
+    )

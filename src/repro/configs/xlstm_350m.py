@@ -1,0 +1,23 @@
+"""xlstm-350m [ssm]: 24L d=1024 4H d_ff=0 vocab=50304 — sLSTM + mLSTM blocks.
+
+xLSTM[7:1] ratio (1-in-8 blocks sLSTM).  Constant-size recurrent state ->
+``long_500k`` RUNS.  [arXiv:2405.04517; unverified]
+"""
+
+from repro.models.xlstm import XLSTMConfig
+
+ID = "xlstm-350m"
+FAMILY = "xlstm"
+LONG_CONTEXT_OK = True
+
+
+def config() -> XLSTMConfig:
+    return XLSTMConfig(
+        n_layers=24, d_model=1024, n_heads=4, vocab=50_304, slstm_every=8,
+    )
+
+
+def smoke_config() -> XLSTMConfig:
+    return XLSTMConfig(
+        n_layers=5, d_model=32, n_heads=2, vocab=256, slstm_every=2,
+    )

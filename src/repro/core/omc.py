@@ -1,0 +1,115 @@
+"""Online Model Compression — public API (paper §2).
+
+``OMCConfig`` bundles the four mechanisms:
+  * minifloat format (``S1E3M7`` etc.) — §2.2
+  * per-variable transformation — §2.3
+  * weights-only policy — §2.4
+  * partial parameter quantization (fraction < 1) — §2.5
+
+Two execution modes:
+  * ``effective_params`` — *simulation* mode: FP32 master weights pass through
+    quantize→dequantize(+PVT) per (round, client) PPQ mask.  Used for
+    convergence experiments and as the numerics reference.
+  * ``compress_tree``/``decompress_tree`` (re-exported from ``store``) —
+    *storage* mode: weights live as uint bitfields and are decompressed
+    layer-by-layer under remat.  Used by the distributed runtime.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .formats import FloatFormat, value_quantize
+from .partial import ppq_mask
+from .policy import QuantizePolicy, path_str, quantizable_names
+from .pvt import pvt_apply, pvt_solve
+from .store import (
+    CompressedVariable,
+    compress_tree,
+    compress_variable,
+    decompress_tree,
+    tree_bytes_report,
+)
+
+DEFAULT_POLICY = QuantizePolicy()
+
+
+@dataclasses.dataclass(frozen=True)
+class OMCConfig:
+    """Configuration of Online Model Compression."""
+
+    fmt: FloatFormat = FloatFormat(3, 7)  # S1E3M7 — the paper's 11-bit format
+    pvt: bool = True
+    quantize_fraction: float = 0.9  # PPQ; 1.0 = all selected vars quantized
+    policy: QuantizePolicy = DEFAULT_POLICY
+    ppq_seed: int = 1729  # deterministic PPQ stream
+
+    @classmethod
+    def parse(cls, fmt: str, **kw) -> "OMCConfig":
+        return cls(fmt=FloatFormat.parse(fmt), **kw)
+
+    @property
+    def enabled(self) -> bool:
+        return not self.fmt.is_identity or self.quantize_fraction < 1.0
+
+    def ppq_key(self) -> jax.Array:
+        return jax.random.PRNGKey(self.ppq_seed)
+
+
+def qdq_pvt_leaf(v: jax.Array, cfg: OMCConfig) -> jax.Array:
+    """quantize→dequantize one variable with optional PVT correction."""
+    vq = value_quantize(v, cfg.fmt)
+    if not cfg.pvt:
+        return vq
+    s, b = pvt_solve(v, vq)
+    return pvt_apply(vq, s, b)
+
+
+def effective_params(
+    params,
+    cfg: OMCConfig,
+    round_index=0,
+    client_id=0,
+):
+    """Simulation-mode view of the params a client would train on.
+
+    Applies qdq(+PVT) to each policy-selected variable, gated by the
+    per-(round, client) PPQ mask.  round_index/client_id may be traced.
+    """
+    if not cfg.enabled:
+        return params
+    names = quantizable_names(params, cfg.policy)
+    if not names:
+        return params
+    mask = ppq_mask(
+        cfg.ppq_key(), round_index, client_id, len(names), cfg.quantize_fraction
+    )
+    index = {n: i for i, n in enumerate(names)}
+
+    def f(path, leaf):
+        name = path_str(path)
+        i = index.get(name)
+        if i is None:
+            return leaf
+        return jnp.where(mask[i], qdq_pvt_leaf(leaf, cfg), leaf)
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def compress(params, cfg: OMCConfig):
+    """Storage-mode compression of a parameter pytree (full selection)."""
+    return compress_tree(params, cfg.fmt, cfg.policy, pvt=cfg.pvt)
+
+
+def decompress(ctree):
+    return decompress_tree(ctree)
+
+
+def bytes_report(params, cfg: OMCConfig):
+    return tree_bytes_report(
+        params, cfg.fmt, cfg.policy, fraction=cfg.quantize_fraction
+    )

@@ -1,0 +1,61 @@
+"""Exact-width bit packing of minifloat codes into a uint32 bitstream.
+
+The container dtype used by the codec (uint8/16/32) wastes padding bits for
+odd widths like 11 (S1E3M7) or 19 (S1E4M14).  On the wire — the federated
+server<->client transport — OMC sends the exact ``ceil(n * bits / 32)`` words.
+This module implements the pack/unpack pair as vectorized JAX ops.
+
+Packing trick: each w-bit field (w <= 32) spans at most two consecutive words.
+Contributions from different fields to the same word occupy *disjoint* bits,
+so a scatter-ADD of the low/high word parts is equivalent to a scatter-OR.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .formats import FloatFormat
+
+
+def packed_words(n: int, width: int) -> int:
+    return -(-n * width // 32)
+
+
+def pack(codes: jax.Array, width: int) -> jax.Array:
+    """Pack ``codes`` (any uint dtype, values < 2**width) into uint32 words."""
+    if not (1 <= width <= 32):
+        raise ValueError(f"width must be in [1, 32], got {width}")
+    flat = codes.reshape(-1).astype(jnp.uint32)
+    n = flat.shape[0]
+    nwords = packed_words(n, width)
+    offs = (jnp.arange(n, dtype=jnp.uint32) * np.uint32(width))
+    word = (offs >> 5).astype(jnp.int32)
+    sh = offs & np.uint32(31)
+    low = (flat << sh) & np.uint32(0xFFFFFFFF)
+    # field >> (32 - sh) is UB when sh == 0; (f >> (31 - sh)) >> 1 is safe.
+    high = (flat >> (np.uint32(31) - sh)) >> np.uint32(1)
+    out = jnp.zeros((nwords + 1,), jnp.uint32)  # +1 slot absorbs last high word
+    out = out.at[word].add(low)
+    out = out.at[word + 1].add(high)
+    return out[:nwords]
+
+
+def unpack(words: jax.Array, width: int, n: int) -> jax.Array:
+    """Inverse of :func:`pack`: recover ``n`` codes of ``width`` bits."""
+    if not (1 <= width <= 32):
+        raise ValueError(f"width must be in [1, 32], got {width}")
+    w = jnp.concatenate([words.astype(jnp.uint32), jnp.zeros((1,), jnp.uint32)])
+    offs = (jnp.arange(n, dtype=jnp.uint32) * np.uint32(width))
+    word = (offs >> 5).astype(jnp.int32)
+    sh = offs & np.uint32(31)
+    lo = w[word] >> sh
+    hi = (w[word + 1] << (np.uint32(31) - sh)) << np.uint32(1)
+    mask = np.uint32((1 << width) - 1) if width < 32 else np.uint32(0xFFFFFFFF)
+    return (lo | hi) & mask
+
+
+def packed_bytes(n: int, fmt: FloatFormat) -> int:
+    """Exact wire bytes for ``n`` values of ``fmt`` (uint32-word granularity)."""
+    return 4 * packed_words(n, fmt.bits)

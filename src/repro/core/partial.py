@@ -1,0 +1,57 @@
+"""Partial Parameter Quantization (paper §2.5).
+
+Each client quantizes only a subset (default 90%) of the quantizable weight
+matrices; the selection varies per federated round and per client, so the
+server keeps receiving full-precision updates of every parameter from the
+clients that didn't quantize it.
+
+The selection is an *exact-fraction* pseudo-random choice (rank of per-variable
+uniform scores), deterministic in (seed, round, client): any participant — or a
+restarted job — recomputes the identical mask, which is what makes the
+transport protocol stateless and checkpoint/restart bit-exact.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def num_selected(num_vars: int, fraction: float) -> int:
+    return int(round(num_vars * float(fraction)))
+
+
+def ppq_mask(
+    seed_key: jax.Array,
+    round_index,
+    client_id,
+    num_vars: int,
+    fraction: float,
+) -> jax.Array:
+    """bool[num_vars]: True = quantize this variable for this (round, client).
+
+    ``round_index`` / ``client_id`` may be traced int32 scalars (fold_in
+    accepts traced values), so the mask can be computed inside a jitted round.
+    """
+    if fraction >= 1.0:
+        return jnp.ones((num_vars,), bool)
+    if fraction <= 0.0:
+        return jnp.zeros((num_vars,), bool)
+    k = num_selected(num_vars, fraction)
+    key = jax.random.fold_in(jax.random.fold_in(seed_key, round_index), client_id)
+    scores = jax.random.uniform(key, (num_vars,))
+    ranks = jnp.argsort(jnp.argsort(scores))  # rank of each score
+    return ranks < k
+
+
+def ppq_masks_batch(
+    seed_key: jax.Array,
+    round_index,
+    client_ids: jax.Array,
+    num_vars: int,
+    fraction: float,
+) -> jax.Array:
+    """bool[num_clients, num_vars] — vmapped per-client masks."""
+    return jax.vmap(
+        lambda c: ppq_mask(seed_key, round_index, c, num_vars, fraction)
+    )(client_ids)

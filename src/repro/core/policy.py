@@ -1,0 +1,91 @@
+"""Which parameters get quantized — 'weight matrices only' (paper §2.4).
+
+The paper found normalization scales/biases quantization-sensitive while the
+weight matrices of matmul-bearing layers (>=99.8% of Conformer parameters) are
+robust.  The default policy therefore selects leaves with ndim >= 2 (weight
+matrices, embedding tables, conv kernels) and excludes everything matching an
+exclusion regex (used e.g. for RG-LRU recurrence parameters, see DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def path_str(path) -> str:
+    """Render a jax tree path as 'a/b/0/c'."""
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizePolicy:
+    """Selects quantizable variables by shape and name.
+
+    weights_only: if True, only leaves with ndim >= min_ndim are candidates.
+    min_ndim:     minimum rank for the weights-only rule (2 = matrices).
+    min_size:     skip tiny variables (their s/b overhead isn't worth it).
+    exclude_re:   path regexes never quantized (sensitive params).
+    include_re:   if set, only matching paths are candidates.
+    """
+
+    weights_only: bool = True
+    min_ndim: int = 2
+    min_size: int = 256
+    exclude_re: Tuple[str, ...] = ()
+    include_re: Optional[Tuple[str, ...]] = None
+
+    def selects(self, path: str, leaf: Any) -> bool:
+        if not hasattr(leaf, "shape") or not hasattr(leaf, "dtype"):
+            return False
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            return False
+        if self.weights_only and leaf.ndim < self.min_ndim:
+            return False
+        if leaf.size < self.min_size:
+            return False
+        for pat in self.exclude_re:
+            if re.search(pat, path):
+                return False
+        if self.include_re is not None:
+            return any(re.search(p, path) for p in self.include_re)
+        return True
+
+
+def quantizable_names(params, policy: QuantizePolicy) -> List[str]:
+    """Deterministically ordered names of the selected leaves."""
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    return [path_str(p) for p, leaf in leaves if policy.selects(path_str(p), leaf)]
+
+
+def selection_mask_tree(params, policy: QuantizePolicy):
+    """Pytree of python bools: True where the policy selects the leaf."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, leaf: policy.selects(path_str(p), leaf), params
+    )
+
+
+def coverage(params, policy: QuantizePolicy) -> float:
+    """Fraction of parameters (by count) selected by the policy."""
+    sel = tot = 0
+    for p, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        if not hasattr(leaf, "size"):
+            continue
+        tot += leaf.size
+        if policy.selects(path_str(p), leaf):
+            sel += leaf.size
+    return sel / max(tot, 1)

@@ -1,0 +1,11 @@
+"""Deterministic synthetic data pipelines (no external datasets offline)."""
+
+from .synthetic import (
+    LMTask,
+    FrameTask,
+    Partitioner,
+    lm_batch,
+    frame_batch,
+    make_lm_task,
+    make_frame_task,
+)

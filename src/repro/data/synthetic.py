@@ -1,0 +1,155 @@
+"""Synthetic learnable tasks with IID / non-IID client partitions.
+
+LibriSpeech/Multi-Domain are not available offline (DESIGN.md §2): the
+convergence benchmarks instead compare FP32-vs-OMC loss curves on
+deterministic synthetic tasks that a small model can actually learn, so the
+quantization-error effects the paper measures (stability, accuracy gap) are
+visible.
+
+  * :class:`LMTask` — a random first-order Markov chain over the vocab.
+    Per-client non-IIDness re-weights the transition rows with a
+    client-specific Dirichlet draw (the "partition by speaker" analogue).
+  * :class:`FrameTask` — synthetic ASR: frame embeddings whose labels are
+    the argmax of a fixed random linear probe over a local context window;
+    non-IID clients add a per-speaker bias vector to the frames; a second
+    "domain" uses a different probe (the MD-dataset domain-adaptation
+    analogue).
+
+Everything is a pure function of (seed, client, round, step) — restart-safe
+and reproducible across hosts, which checkpoint/restart tests rely on.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Partitioner:
+    """Client data distribution control."""
+
+    num_clients: int
+    iid: bool = True
+    alpha: float = 0.3  # Dirichlet concentration for non-IID skew
+
+
+# ---------------------------------------------------------------------------
+# Language-model task (token streams)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class LMTask:
+    vocab: int
+    seq_len: int
+    part: Partitioner
+    seed: int = 0
+    temperature: float = 1.5
+
+    def _logits(self) -> jax.Array:
+        k = jax.random.PRNGKey(self.seed)
+        return jax.random.normal(k, (self.vocab, self.vocab)) * self.temperature
+
+    def client_logits(self, client_id) -> jax.Array:
+        base = self._logits()
+        if self.part.iid:
+            return base
+        kc = jax.random.fold_in(jax.random.PRNGKey(self.seed + 1), client_id)
+        # per-client sparse re-weighting of next-token preferences
+        bias = jnp.log(
+            jax.random.dirichlet(kc, jnp.full((self.vocab,), self.part.alpha))
+            + 1e-8
+        )
+        return base + bias[None, :]
+
+    def batch(self, client_id, round_index, step, batch_size: int):
+        return lm_batch(self, client_id, round_index, step, batch_size)
+
+
+def lm_batch(task: LMTask, client_id, round_index, step, batch_size: int):
+    """Sample [B, S+1] Markov tokens -> {tokens, labels} (next-token LM)."""
+    logits = task.client_logits(client_id)
+    k = jax.random.fold_in(
+        jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(task.seed + 2), client_id),
+            round_index,
+        ),
+        step,
+    )
+    k0, kseq = jax.random.split(k)
+    first = jax.random.randint(k0, (batch_size,), 0, task.vocab)
+
+    def gen(tok, kk):
+        nxt = jax.random.categorical(kk, logits[tok])
+        return nxt, nxt
+
+    keys = jax.random.split(kseq, task.seq_len)
+    _, rest = jax.lax.scan(gen, first, keys)
+    seq = jnp.concatenate([first[None], rest], 0).T  # [B, S+1]
+    return dict(tokens=seq[:, :-1], labels=seq[:, 1:])
+
+
+def make_lm_task(vocab=256, seq_len=64, num_clients=16, iid=True,
+                 alpha=0.3, seed=0) -> LMTask:
+    return LMTask(vocab, seq_len, Partitioner(num_clients, iid, alpha), seed)
+
+
+# ---------------------------------------------------------------------------
+# Frame-classification task (synthetic ASR)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FrameTask:
+    d_in: int
+    n_classes: int
+    seq_len: int
+    part: Partitioner
+    seed: int = 0
+    domain: int = 0  # domain id: different probe = different domain (MD)
+    context: int = 2  # label depends on +-context frames
+    speaker_bias: float = 1.0  # non-IID frame shift magnitude
+
+    def probe(self) -> jax.Array:
+        k = jax.random.fold_in(jax.random.PRNGKey(self.seed + 10), self.domain)
+        return jax.random.normal(
+            k, (self.d_in * (2 * self.context + 1), self.n_classes)
+        )
+
+    def batch(self, client_id, round_index, step, batch_size: int):
+        return frame_batch(self, client_id, round_index, step, batch_size)
+
+
+def frame_batch(task: FrameTask, client_id, round_index, step, batch_size: int):
+    k = jax.random.fold_in(
+        jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(task.seed + 3), client_id),
+            round_index,
+        ),
+        step,
+    )
+    frames = jax.random.normal(k, (batch_size, task.seq_len, task.d_in))
+    if not task.part.iid:
+        kb = jax.random.fold_in(jax.random.PRNGKey(task.seed + 4), client_id)
+        frames = frames + task.speaker_bias * jax.random.normal(
+            kb, (task.d_in,)
+        )
+    # window the frames and probe for labels
+    c = task.context
+    padded = jnp.pad(frames, ((0, 0), (c, c), (0, 0)))
+    windows = jnp.concatenate(
+        [padded[:, i : i + task.seq_len] for i in range(2 * c + 1)], axis=-1
+    )
+    labels = jnp.argmax(windows @ task.probe(), axis=-1)
+    return dict(frames=frames, labels=labels.astype(jnp.int32))
+
+
+def make_frame_task(d_in=16, n_classes=32, seq_len=48, num_clients=16,
+                    iid=True, alpha=0.3, seed=0, domain=0) -> FrameTask:
+    return FrameTask(d_in, n_classes, seq_len,
+                     Partitioner(num_clients, iid, alpha), seed, domain)

@@ -1,0 +1,6 @@
+"""Federated runtime: OMC materialization, jit-able rounds, simulation."""
+
+from .materialize import OMCMaterializer, QParam, make_sinks, pack_qparams
+from .state import TrainState, init_state, state_bytes_report
+from .round import make_round_fn, make_eval_fn
+from .cohort import CohortPlan, sample_cohort

@@ -1,0 +1,80 @@
+"""Cohort sampling, client failures, and straggler semantics (DESIGN.md §5).
+
+Production FL over-provisions: the server invites ``cohort_size`` clients but
+closes the round once ``report_goal`` reports arrive (deadline semantics).
+Simulation reproduces this with a per-round survival mask; FedAvg weighting
+renormalizes over survivors so partial cohorts stay unbiased.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CohortPlan:
+    num_clients: int  # population size
+    cohort_size: int  # invited per round
+    report_goal: Optional[int] = None  # round closes at this many reports
+    failure_rate: float = 0.0  # iid client dropout probability
+    straggler_rate: float = 0.0  # fraction dropped at the deadline (slowest)
+
+    def __post_init__(self):
+        if self.report_goal is None:
+            object.__setattr__(self, "report_goal", self.cohort_size)
+        if self.report_goal > self.cohort_size:
+            raise ValueError("report_goal cannot exceed cohort_size")
+
+
+def sample_cohort(key: jax.Array, plan: CohortPlan, round_index) -> jax.Array:
+    """int32[cohort_size] client ids, sampled without replacement."""
+    k = jax.random.fold_in(key, round_index)
+    perm = jax.random.permutation(k, plan.num_clients)
+    return perm[: plan.cohort_size].astype(jnp.int32)
+
+
+def survival_mask(key: jax.Array, plan: CohortPlan, round_index) -> jax.Array:
+    """bool[cohort_size]: True = client's report arrives in time.
+
+    Failures are iid drops; stragglers are an additional slowest-k cut at the
+    report deadline (simulated with random latencies).  At least one client
+    always survives (a round with zero reports is retried in production; we
+    model the retry as the fastest client making it).
+    """
+    k = jax.random.fold_in(jax.random.fold_in(key, round_index), 0x57A6)
+    kf, kl = jax.random.split(k)
+    alive = jax.random.uniform(kf, (plan.cohort_size,)) >= plan.failure_rate
+    latency = jax.random.uniform(kl, (plan.cohort_size,))
+    latency = jnp.where(alive, latency, jnp.inf)
+    n_keep = max(
+        1,
+        min(plan.report_goal,
+            int(round(plan.cohort_size * (1.0 - plan.straggler_rate)))),
+    )
+    order = jnp.argsort(latency)
+    keep = jnp.zeros((plan.cohort_size,), bool).at[order[:n_keep]].set(True)
+    keep = keep & alive
+    # guarantee >= 1 survivor
+    any_alive = keep.any()
+    keep = jnp.where(any_alive, keep,
+                     jnp.zeros_like(keep).at[jnp.argmin(latency)].set(True))
+    return keep
+
+
+def aggregate_weighted(deltas: jax.Array, weights: jax.Array):
+    """Weighted mean over the leading client axis, per-leaf.
+
+    deltas: pytree with leaves [C, ...]; weights: [C] (0 for dropped
+    clients).  Renormalizes by the surviving weight sum.
+    """
+    wsum = jnp.maximum(weights.sum(), 1e-9)
+
+    def f(x):
+        w = weights.reshape((-1,) + (1,) * (x.ndim - 1))
+        return (x * w).sum(0) / wsum
+
+    return jax.tree_util.tree_map(f, deltas)

@@ -1,0 +1,135 @@
+"""The jit-able federated round — what the multi-pod dry-run lowers.
+
+One round (paper §1, TPU-native mapping per DESIGN.md §4):
+
+  1. server->client transport: per-layer all-gather of the *compressed*
+     bitfield codes over the fsdp axis (u8/u16/u32 — the paper's
+     communication saving), decoded + PVT-corrected on the fly under remat,
+  2. cohort-parallel local step: every (pod, data) mesh slice is a client
+     training on its batch shard; grads w.r.t. the effective (decompressed)
+     weights are the client deltas,
+  3. client->server aggregation: the batch-mean inside backward *is* the
+     cohort mean; the storage-sharding constraint on the grads lowers it to
+     a reduce-scatter,
+  4. server optimizer applies the mean delta to the decoded values and
+     re-compresses — the updated parameters are stored quantized again, so
+     the client-side quantized-storage model of the paper holds server-side
+     too (no persistent f32 master).
+
+PPQ note: the lowered round quantizes every policy-selected variable
+(fraction = 1).  Per-client PPQ masks need per-client effective weights —
+exercised faithfully in simulation mode (repro.federated.simulate) and
+documented as a cohort-granularity deviation at >=10 B scale (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import decode
+from repro.core.omc import OMCConfig
+from repro.core.pvt import pvt_apply
+from repro.core.store import CompressedVariable, compress_variable, is_compressed
+from repro.models.common import Materializer, ParamSpec, _pad_spec, shard_hint
+from repro.optim import Optimizer
+
+from .materialize import OMCMaterializer, make_sinks, pack_qparams
+from .state import TrainState, n_stack_axes
+
+
+def _constrain_storage(tree, specs):
+    """Pin each leaf to its storage sharding (forces grad reduce-scatter)."""
+
+    def f(spec, leaf):
+        return shard_hint(leaf, *_pad_spec(spec.storage, leaf.ndim))
+
+    return jax.tree_util.tree_map(
+        f, specs, tree, is_leaf=lambda s: isinstance(s, ParamSpec)
+    )
+
+
+def make_round_fn(
+    family,
+    cfg,
+    omc: OMCConfig,
+    server_opt: Optimizer,
+    client_lr=1e-2,
+    compute_dtype=jnp.float32,
+) -> Callable[[TrainState, Any], Tuple[TrainState, Dict[str, jax.Array]]]:
+    """Build the federated-round step function (jit / pjit it yourself)."""
+    specs = family.param_specs(cfg)
+
+    def round_fn(state: TrainState, batch) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        sinks = make_sinks(state.params, specs)
+
+        def loss_fn(sinks_):
+            packed = pack_qparams(state.params, sinks_)
+            mat = OMCMaterializer(None, compute_dtype)
+            return family.loss(cfg, packed, batch, mat)
+
+        loss, grads = jax.value_and_grad(loss_fn)(sinks)
+        grads = _constrain_storage(grads, specs)
+
+        lr = client_lr(state.round) if callable(client_lr) else jnp.float32(client_lr)
+        # FedOpt: server-grad = -mean_delta = +lr * grads
+        server_grads = jax.tree_util.tree_map(lambda g: lr * g, grads)
+        upd, new_opt_state = server_opt.update(server_grads, state.opt_state)
+
+        def leaf_update(spec, p, u):
+            u = shard_hint(u, *_pad_spec(spec.storage, u.ndim))
+            if is_compressed(p):
+                v = pvt_apply(decode(p.codes, p.fmt), p.s, p.b) + u
+                return compress_variable(
+                    v, p.fmt, pvt=omc.pvt, batch_axes=n_stack_axes(spec, u),
+                    fast=True,
+                )
+            return p + u
+
+        new_params = jax.tree_util.tree_map(
+            leaf_update, specs, state.params, upd,
+            is_leaf=lambda s: isinstance(s, ParamSpec),
+        )
+        new_state = TrainState(
+            params=new_params,
+            opt_state=new_opt_state,
+            round=state.round + 1,
+            rng=jax.random.fold_in(state.rng, state.round),
+        )
+        # NOTE: per-leaf sum-of-squares, NOT jnp.vdot — vdot ravels to 1-D,
+        # which un-shards the stacked grads and forces full-model all-gathers.
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g)) for g in jax.tree_util.tree_leaves(grads))
+        )
+        return new_state, dict(loss=loss, grad_norm=gnorm)
+
+    return round_fn
+
+
+def make_eval_fn(family, cfg, compute_dtype=jnp.float32):
+    """Forward-only loss on the compressed (or f32) server params."""
+
+    def eval_fn(params, batch):
+        packed = pack_qparams(params, None)
+        mat = OMCMaterializer(None, compute_dtype)
+        return family.loss(cfg, packed, batch, mat)
+
+    return eval_fn
+
+
+def make_serve_fns(family, cfg, compute_dtype=jnp.float32):
+    """(prefill_fn, decode_fn) over compressed weights — serving path."""
+    mat = OMCMaterializer(None, compute_dtype)
+
+    def prefill_fn(params, batch, cache):
+        packed = pack_qparams(params, None)
+        return family.prefill(cfg, packed, batch, mat, cache)
+
+    def decode_fn(params, cache, tokens):
+        packed = pack_qparams(params, None)
+        return family.decode_step(cfg, packed, cache, tokens, mat)
+
+    return prefill_fn, decode_fn

@@ -1,0 +1,186 @@
+"""Faithful federated simulation (paper semantics, client granularity).
+
+This is the numerics-reference path used by every paper-table benchmark:
+
+  * the server stores the model in OMC form (CompressedVariable leaves),
+  * each round a cohort is sampled; each client
+      1. receives the decompressed server model,
+      2. applies *its own* PPQ mask (per round, per client — paper §2.5):
+         selected vars pass through quantize->dequantize(+PVT), the rest
+         stay at the received full-precision values,
+      3. runs ``local_steps`` of SGD on its local batch,
+      4. re-quantizes the *updated* variables under the same mask (the
+         transport compression: what travels client->server), and
+  * the server aggregates the (decompressed) client models weighted by
+    surviving-client example counts and re-compresses its state.
+
+The per-client loop is a Python loop (cohorts are small in the benchmarks);
+inside it everything is jitted.  Client failures / stragglers drop reports
+through :mod:`repro.federated.cohort`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.omc import OMCConfig, qdq_pvt_leaf
+from repro.core.partial import ppq_mask
+from repro.core.policy import path_str
+from repro.core.store import decompress_tree, is_compressed
+from repro.models.common import IDENTITY_MAT, ParamSpec
+
+from . import cohort as cohort_lib
+from .state import compress_params, n_stack_axes, selected
+
+
+def _selected_names(params_f32, specs, omc: OMCConfig):
+    names = []
+
+    def f(path, spec, leaf):
+        if selected(omc, path_str(path), spec, leaf):
+            names.append(path_str(path))
+        return leaf
+
+    jax.tree_util.tree_map_with_path(
+        f, specs, params_f32, is_leaf=lambda s: isinstance(s, ParamSpec)
+    )
+    return names
+
+
+def client_view(params_f32, specs, omc: OMCConfig, round_index, client_id):
+    """Apply the client's PPQ-masked quantize->dequantize(+PVT) view."""
+    if not omc.enabled:
+        return params_f32
+    names = _selected_names(params_f32, specs, omc)
+    if not names:
+        return params_f32
+    mask = ppq_mask(omc.ppq_key(), round_index, client_id, len(names),
+                    omc.quantize_fraction)
+    index = {n: i for i, n in enumerate(names)}
+
+    def f(path, spec, leaf):
+        i = index.get(path_str(path))
+        if i is None:
+            return leaf
+        return jnp.where(mask[i], qdq_pvt_leaf(leaf, omc), leaf)
+
+    return jax.tree_util.tree_map_with_path(
+        f, specs, params_f32, is_leaf=lambda s: isinstance(s, ParamSpec)
+    )
+
+
+@dataclasses.dataclass
+class SimConfig:
+    local_steps: int = 1
+    client_lr: float = 0.05
+    server_lr: float = 1.0
+
+
+def make_client_update(family, cfg, specs, omc: OMCConfig, sim: SimConfig):
+    """jitted: (server_f32, batch_stack, round, client_id) -> client model."""
+
+    @functools.partial(jax.jit, static_argnames=())
+    def client_update(server_f32, batches, round_index, client_id):
+        eff = client_view(server_f32, specs, omc, round_index, client_id)
+
+        def step(params, batch):
+            loss, g = jax.value_and_grad(
+                lambda p: family.loss(cfg, p, batch, IDENTITY_MAT)
+            )(params)
+            params = jax.tree_util.tree_map(
+                lambda p, gg: p - sim.client_lr * gg, params, g
+            )
+            return params, loss
+
+        trained, losses = jax.lax.scan(step, eff, batches)
+        # transport compression: re-quantize under the same client mask
+        out = client_view(trained, specs, omc, round_index, client_id)
+        return out, losses.mean()
+
+    return client_update
+
+
+def run_round(
+    family,
+    cfg,
+    specs,
+    omc: OMCConfig,
+    sim: SimConfig,
+    server_params,  # storage tree (CompressedVariable | f32)
+    data_fn: Callable[[int, int, int], Any],  # (client_id, round, step)->batch
+    plan: cohort_lib.CohortPlan,
+    round_index: int,
+    key: jax.Array,
+    client_update=None,
+) -> Tuple[Any, Dict[str, float]]:
+    """One faithful federated round.  Returns (new server storage, metrics)."""
+    server_f32 = decompress_tree(server_params)
+    ids = cohort_lib.sample_cohort(key, plan, round_index)
+    alive = cohort_lib.survival_mask(key, plan, round_index)
+    if client_update is None:
+        client_update = make_client_update(family, cfg, specs, omc, sim)
+
+    models, weights, losses = [], [], []
+    for j in range(plan.cohort_size):
+        cid = int(ids[j])
+        if not bool(alive[j]):
+            continue
+        batches = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs),
+            *[data_fn(cid, round_index, s) for s in range(sim.local_steps)],
+        )
+        m, l = client_update(server_f32, batches,
+                             jnp.int32(round_index), jnp.int32(cid))
+        models.append(m)
+        weights.append(1.0)
+        losses.append(float(l))
+
+    w = jnp.asarray(weights, jnp.float32)
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *models)
+    mean_model = cohort_lib.aggregate_weighted(stacked, w)
+    # server step: interpolate towards the cohort mean, then re-compress
+    new_f32 = jax.tree_util.tree_map(
+        lambda old, new: old + sim.server_lr * (new - old), server_f32, mean_model
+    )
+    new_storage = compress_params(new_f32, specs, omc) if omc.enabled else new_f32
+    metrics = dict(
+        loss=float(jnp.mean(jnp.asarray(losses))),
+        cohort=len(models),
+        dropped=int(plan.cohort_size - len(models)),
+    )
+    return new_storage, metrics
+
+
+def run_training(
+    family, cfg, omc: OMCConfig, sim: SimConfig, plan: cohort_lib.CohortPlan,
+    data_fn, init_key, num_rounds: int,
+    eval_fn: Optional[Callable[[Any, int], float]] = None,
+    eval_every: int = 10,
+    init_params=None,
+    log: Optional[Callable[[str], None]] = None,
+):
+    """Full simulation loop.  Returns (final storage params, history)."""
+    specs = family.param_specs(cfg)
+    params = family.init(init_key, cfg) if init_params is None else init_params
+    storage = compress_params(params, specs, omc) if omc.enabled else params
+    client_update = make_client_update(family, cfg, specs, omc, sim)
+    key = jax.random.fold_in(init_key, 0xC047)
+    history = []
+    for r in range(num_rounds):
+        storage, metrics = run_round(
+            family, cfg, specs, omc, sim, storage, data_fn, plan, r, key,
+            client_update=client_update,
+        )
+        if eval_fn is not None and (r + 1) % eval_every == 0:
+            metrics["eval"] = float(eval_fn(decompress_tree(storage), r))
+        history.append(dict(round=r, **metrics))
+        if log and ((r + 1) % eval_every == 0 or r == 0):
+            log(f"round {r + 1}/{num_rounds}: " +
+                ", ".join(f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+                          for k, v in metrics.items()))
+    return storage, history

@@ -1,0 +1,133 @@
+"""Server training state: compressed-at-rest parameters + optimizer state.
+
+``init_state`` applies the OMC policy to a freshly-initialized f32 param
+tree: selected variables become ``CompressedVariable`` (this is the paper's
+storage model — no persistent f32 master exists between rounds; the decoded
+values are transient).  The number of PVT batch axes per leaf (stacked
+layers / experts) is derived from the ParamSpec: stacked axes are exactly
+the leading axes not covered by the spec.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+from repro.core.formats import FloatFormat
+from repro.core.omc import OMCConfig
+from repro.core.policy import path_str
+from repro.core.store import CompressedVariable, compress_variable, is_compressed
+from repro.models.common import ParamSpec
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any  # pytree: CompressedVariable | f32 leaves
+    opt_state: Any
+    round: jax.Array  # [] int32
+    rng: jax.Array  # PRNGKey
+
+
+def n_stack_axes(spec: ParamSpec, leaf) -> int:
+    """Leading stacked axes = rank beyond what the spec describes."""
+    return max(leaf.ndim - len(spec.storage), 0)
+
+
+def effective_ndim(spec: ParamSpec, leaf) -> int:
+    return leaf.ndim - n_stack_axes(spec, leaf)
+
+
+def selected(omc: OMCConfig, path: str, spec: ParamSpec, leaf) -> bool:
+    """Weights-only policy with stacked-axis awareness (paper §2.4)."""
+    if not omc.enabled:
+        return False
+    pol = omc.policy
+    if not hasattr(leaf, "shape") or not jnp.issubdtype(leaf.dtype, jnp.floating):
+        return False
+    if pol.weights_only and effective_ndim(spec, leaf) < pol.min_ndim:
+        return False
+    if leaf.size < pol.min_size:
+        return False
+    import re
+    for pat in pol.exclude_re:
+        if re.search(pat, path):
+            return False
+    if pol.include_re is not None:
+        return any(re.search(p, path) for p in pol.include_re)
+    return True
+
+
+def compress_params(params, specs, omc: OMCConfig, fast: bool = True):
+    """f32 tree -> storage tree (selected leaves CompressedVariable)."""
+
+    def f(path, spec, leaf):
+        if selected(omc, path_str(path), spec, leaf):
+            return compress_variable(
+                leaf, omc.fmt, pvt=omc.pvt, batch_axes=n_stack_axes(spec, leaf),
+                fast=fast,
+            )
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(
+        f, specs, params, is_leaf=lambda s: isinstance(s, ParamSpec)
+    )
+
+
+def init_state(key, family, cfg, omc: OMCConfig, server_opt) -> TrainState:
+    """Initialize params (f32), compress per policy, set up the server opt."""
+    params = family.init(key, cfg)
+    specs = family.param_specs(cfg)
+    storage = compress_params(params, specs, omc) if omc.enabled else params
+    opt_state = server_opt.init(
+        jax.tree_util.tree_map(
+            lambda v: jnp.zeros(v.codes.shape, jnp.float32) if is_compressed(v) else v,
+            storage,
+            is_leaf=is_compressed,
+        )
+    )
+    return TrainState(
+        params=storage,
+        opt_state=opt_state,
+        round=jnp.zeros((), jnp.int32),
+        rng=jax.random.fold_in(key, 0xF3D),
+    )
+
+
+# ---------------------------------------------------------------------------
+# byte accounting over the *actual* state (backs §3.4-style measured tables)
+# ---------------------------------------------------------------------------
+
+
+def state_bytes_report(params) -> Dict[str, Any]:
+    total = dict(fp32_bytes=0, container_bytes=0, packed_bytes=0,
+                 num_params=0, num_compressed=0)
+
+    def visit(leaf):
+        if is_compressed(leaf):
+            n = int(leaf.codes.size)
+            total["num_params"] += n
+            total["num_compressed"] += n
+            total["fp32_bytes"] += 4 * n
+            total["container_bytes"] += (
+                n * leaf.fmt.container_bytes_per_value + 8 * int(leaf.s.size)
+            )
+            total["packed_bytes"] += (
+                packing.packed_bytes(n, leaf.fmt) + 8 * int(leaf.s.size)
+            )
+        elif hasattr(leaf, "size") and jnp.issubdtype(leaf.dtype, jnp.floating):
+            n = int(leaf.size)
+            total["num_params"] += n
+            total["fp32_bytes"] += 4 * n
+            total["container_bytes"] += 4 * n
+            total["packed_bytes"] += 4 * n
+
+    for leaf in jax.tree_util.tree_leaves(params, is_leaf=is_compressed):
+        visit(leaf)
+    total["container_ratio"] = total["container_bytes"] / max(total["fp32_bytes"], 1)
+    total["packed_ratio"] = total["packed_bytes"] / max(total["fp32_bytes"], 1)
+    return total

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for OMC hot spots (validated via interpret mode).
+
+quantize / dequantize / quantize_stats: HBM-bandwidth elementwise codecs;
+dequant_matmul: serving matmul that decompresses weight tiles in VMEM.
+``ops`` holds the jit'd dispatching wrappers; ``ref`` the pure-jnp oracles.
+"""
+
+from . import ops, ref

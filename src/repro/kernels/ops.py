@@ -1,0 +1,74 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Dispatch policy:
+  * on TPU: compiled Pallas kernels,
+  * elsewhere: pure-jnp reference (``ref.py``) by default — fast on CPU —
+    or interpret-mode Pallas when ``force_interpret=True`` (used by the
+    correctness tests, which execute the actual kernel bodies).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import FloatFormat
+
+from . import dequant_matmul as _dm
+from . import quantize as _q
+from . import ref
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:
+        return False
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "force_interpret"))
+def quantize(x, fmt: FloatFormat, force_interpret: bool = False):
+    if _on_tpu():
+        return _q.quantize(x, fmt)
+    if force_interpret:
+        return _q.quantize(x, fmt, interpret=True)
+    return ref.ref_quantize(x, fmt)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "force_interpret"))
+def dequantize(codes, fmt: FloatFormat, s=None, b=None,
+               force_interpret: bool = False):
+    if _on_tpu():
+        return _q.dequantize(codes, fmt, s, b)
+    if force_interpret:
+        return _q.dequantize(codes, fmt, s, b, interpret=True)
+    return ref.ref_dequantize(codes, fmt, s, b)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "force_interpret"))
+def quantize_stats(x, fmt: FloatFormat, force_interpret: bool = False):
+    if _on_tpu():
+        return _q.quantize_stats(x, fmt)
+    if force_interpret:
+        return _q.quantize_stats(x, fmt, interpret=True)
+    return ref.ref_quantize_stats(x, fmt)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("fmt", "bm", "bn", "bk", "force_interpret"))
+def dequant_matmul(a, w_codes, fmt: FloatFormat, s=None, b=None,
+                   bm: int = 256, bn: int = 256, bk: int = 256,
+                   force_interpret: bool = False):
+    if _on_tpu():
+        return _dm.dequant_matmul(a, w_codes, fmt, s, b, bm=bm, bn=bn, bk=bk)
+    if force_interpret:
+        return _dm.dequant_matmul(a, w_codes, fmt, s, b, bm=bm, bn=bn, bk=bk,
+                                  interpret=True)
+    return ref.ref_dequant_matmul(
+        a, w_codes, fmt,
+        jnp.float32(1.0) if s is None else s,
+        jnp.float32(0.0) if b is None else b,
+    )

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each kernel's test sweeps shapes/dtypes and asserts allclose against these.
+They are also the CPU fallback used by ``ops.py`` when Pallas interpret mode
+is not wanted (e.g. inside hot benchmark loops).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.formats import FloatFormat, decode, encode, value_quantize
+from repro.core.pvt import pvt_apply
+
+
+def ref_quantize(x: jax.Array, fmt: FloatFormat) -> jax.Array:
+    """f32 -> bitfield codes (RNE, subnormal-aware, saturating)."""
+    return encode(x, fmt, quantize=True)
+
+
+def ref_dequantize(codes: jax.Array, fmt: FloatFormat, s=None, b=None) -> jax.Array:
+    """codes -> f32, optionally fused with the PVT affine (s·x + b)."""
+    out = decode(codes, fmt)
+    if s is not None:
+        out = pvt_apply(out, s, b if b is not None else jnp.float32(0))
+    return out
+
+
+def ref_dequant_matmul(
+    a: jax.Array,
+    w_codes: jax.Array,
+    fmt: FloatFormat,
+    s: jax.Array,
+    b: jax.Array,
+    *,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """a[M,K] @ (s·decode(w_codes[K,N]) + b) with f32 accumulation."""
+    w = pvt_apply(decode(w_codes, fmt), s, b)
+    return jnp.dot(
+        a.astype(jnp.float32), w, preferred_element_type=jnp.float32
+    ).astype(out_dtype)
+
+
+def ref_quantize_stats(x: jax.Array, fmt: FloatFormat):
+    """Fused quantize + PVT statistics.
+
+    Returns (codes, sums) where sums = [Σv, Σṽ, Σv·ṽ, Σṽ²] as f32.
+    """
+    vq = value_quantize(x, fmt)
+    codes = encode(vq, fmt, quantize=False)
+    v = x.astype(jnp.float32).reshape(-1)
+    q = vq.astype(jnp.float32).reshape(-1)
+    sums = jnp.stack([v.sum(), q.sum(), (v * q).sum(), (q * q).sum()])
+    return codes, sums

@@ -1,0 +1,202 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+This proves the distribution config is coherent without real hardware: a
+sharding mismatch, OOM-at-compile or unsupported collective fails here.
+Outputs per cell: memory_analysis, cost_analysis, collective schedule and
+the three roofline terms -> JSON under experiments/dryrun/.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen2.5-3b --shape train_4k
+    python -m repro.launch.dryrun --all            # every assigned cell
+    python -m repro.launch.dryrun --arch ... --shape ... --multi-pod
+    python -m repro.launch.dryrun ... --fp32-baseline   # paper FP32 control
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ASSIGNED, get_arch
+from repro.configs.shapes import SHAPES, Shape
+from repro.core.omc import OMCConfig
+from repro.federated.round import make_round_fn, make_serve_fns
+from repro.federated.state import init_state
+from repro.launch import specs as S
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh
+from repro.models.common import activate_mesh
+from repro.models.registry import get_family
+from repro.optim import fedavg
+from repro.roofline.analysis import analyze_compiled, model_flops
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def build_and_lower(arch_id: str, shape_name: str, *, multi_pod: bool = False,
+                    fmt: str = "S1E4M14", fp32_baseline: bool = False,
+                    compute_dtype: str = "bf16", overrides=None):
+    """Returns (lowered, n_chips, cfg, shape, extras)."""
+    arch = get_arch(arch_id)
+    shape = SHAPES[shape_name]
+    if shape.sub_quadratic_only and not arch.LONG_CONTEXT_OK:
+        raise SystemExit(
+            f"SKIP {arch_id} x {shape_name}: full-attention arch, long-context "
+            f"decode requires sub-quadratic state (DESIGN.md §6)"
+        )
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    family = get_family(arch.FAMILY)
+    cfg = S.maybe_ep_partitions(arch.config(), mesh)
+    if overrides:
+        import dataclasses as _dc
+        typed = {}
+        for k, v in overrides.items():
+            cur = getattr(cfg, k)
+            typed[k] = type(cur)(v) if cur is not None and not isinstance(cur, bool) else (
+                v in ("1", "true", "True") if isinstance(cur, bool) else v)
+        cfg = _dc.replace(cfg, **typed)
+    omc = OMCConfig.parse("S1E8M23" if fp32_baseline else fmt)
+    cdt = jnp.bfloat16 if compute_dtype == "bf16" else jnp.float32
+
+    with activate_mesh(mesh):
+        batch = S.annotate_batch(S.batch_specs(arch, cfg, shape), mesh)
+        if shape.kind == "train":
+            opt = fedavg(1.0)
+            state_struct = jax.eval_shape(
+                lambda k: init_state(k, family, cfg, omc, opt),
+                jax.random.PRNGKey(0),
+            )
+            state_in = S.annotate_state(state_struct, family.param_specs(cfg), mesh)
+            round_fn = make_round_fn(family, cfg, omc, opt, client_lr=1e-2,
+                                     compute_dtype=cdt)
+            fn = jax.jit(round_fn, donate_argnums=(0,))
+            lowered = fn.lower(state_in, batch)
+        else:
+            params_struct = jax.eval_shape(
+                lambda k: init_state(k, family, cfg, omc, fedavg(1.0)).params,
+                jax.random.PRNGKey(0),
+            )
+            params_in = S.annotate_tree(params_struct, family.param_specs(cfg), mesh)
+            prefill_fn, decode_fn = make_serve_fns(family, cfg, compute_dtype=cdt)
+            cache_struct = jax.eval_shape(
+                lambda: family.init_decode_state(cfg, shape.global_batch,
+                                                 shape.seq_len)
+            )
+            cache_in = S.annotate_cache(cache_struct, arch.FAMILY, cfg, mesh)
+            if shape.kind == "prefill":
+                fn = jax.jit(prefill_fn, donate_argnums=(2,))
+                lowered = fn.lower(params_in, batch, cache_in)
+            else:
+                fn = jax.jit(decode_fn, donate_argnums=(1,))
+                lowered = fn.lower(params_in, cache_in, batch["tokens"])
+    return lowered, n_chips, cfg, shape, dict(mesh_shape=tuple(mesh.devices.shape),
+                                              arch=arch, family=family)
+
+
+def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
+             fmt: str = "S1E4M14", fp32_baseline: bool = False,
+             out_dir: Optional[str] = None, tag: str = "",
+             overrides=None) -> Dict[str, Any]:
+    t0 = time.time()
+    lowered, n_chips, cfg, shape, ex = build_and_lower(
+        arch_id, shape_name, multi_pod=multi_pod, fmt=fmt,
+        fp32_baseline=fp32_baseline, overrides=overrides,
+    )
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                mem[k] = int(v)
+    except Exception as e:  # CPU backend may not support it
+        mem["error"] = str(e)
+
+    hlo_text = compiled.as_text()
+    terms = analyze_compiled(
+        compiled, n_chips,
+        peak_flops=PEAK_FLOPS_BF16, hbm_bw=HBM_BW, link_bw=ICI_BW,
+        model_flops_total=model_flops(ex["arch"], cfg, shape),
+    )
+    result = dict(
+        arch=arch_id, shape=shape_name, mesh=list(ex["mesh_shape"]),
+        n_chips=n_chips, fmt=("S1E8M23" if fp32_baseline else fmt),
+        lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+        memory_analysis=mem,
+        roofline=terms.to_dict(),
+        hlo_bytes_len=len(hlo_text),
+    )
+    od = out_dir or OUT_DIR
+    os.makedirs(od, exist_ok=True)
+    mesh_tag = "multipod" if multi_pod else "pod"
+    suffix = f"_{tag}" if tag else ("_fp32" if fp32_baseline else "")
+    path = os.path.join(od, f"{arch_id}_{shape_name}_{mesh_tag}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1)
+    print(f"OK {arch_id} x {shape_name} [{mesh_tag}] "
+          f"lower={t_lower:.0f}s compile={t_compile:.0f}s "
+          f"dominant={terms.dominant} "
+          f"terms=({terms.compute_s*1e3:.1f}, {terms.memory_s*1e3:.1f}, "
+          f"{terms.collective_s*1e3:.1f}) ms -> {path}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--fmt", default="S1E4M14")
+    ap.add_argument("--fp32-baseline", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out-dir", default=None)
+    ap.add_argument("--set", action="append", default=[],
+                    help="config override key=value (repeatable)")
+    args = ap.parse_args()
+    overrides = dict(s.split("=", 1) for s in args.set) or None
+
+    if args.all:
+        failures = []
+        for arch_id in ASSIGNED:
+            for shape_name, shape in SHAPES.items():
+                arch = get_arch(arch_id)
+                if shape.sub_quadratic_only and not arch.LONG_CONTEXT_OK:
+                    print(f"SKIP {arch_id} x {shape_name} (full attention)")
+                    continue
+                try:
+                    run_cell(arch_id, shape_name, multi_pod=args.multi_pod,
+                             fmt=args.fmt, fp32_baseline=args.fp32_baseline,
+                             out_dir=args.out_dir, tag=args.tag)
+                except Exception:
+                    traceback.print_exc()
+                    failures.append((arch_id, shape_name))
+        if failures:
+            raise SystemExit(f"FAILED cells: {failures}")
+        print("ALL CELLS PASSED")
+        return
+    run_cell(args.arch, args.shape, multi_pod=args.multi_pod, fmt=args.fmt,
+             fp32_baseline=args.fp32_baseline, out_dir=args.out_dir,
+             tag=args.tag, overrides=overrides)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,216 @@
+"""ShapeDtypeStruct input stand-ins + sharding annotation for the dry-run.
+
+``input_specs(arch, shape)`` returns weak-type-correct, shardable,
+zero-allocation stand-ins for every model input of that (arch x shape) cell;
+``annotate`` attaches NamedShardings so ``jit(...).lower(*specs)`` sees the
+production sharding layout without touching device memory.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import Shape
+from repro.models.common import ParamSpec, _pad_spec, resolve_spec
+
+
+def maybe_ep_partitions(cfg, mesh) -> Any:
+    """MoE: set ep_partitions so stored experts divide the model axis."""
+    if not hasattr(cfg, "n_experts") or mesh is None:
+        return cfg
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    m = sizes.get("model", 1)
+    if cfg.n_experts % m == 0 or m % cfg.n_experts != 0:
+        return cfg
+    return dataclasses.replace(cfg, ep_partitions=m // cfg.n_experts)
+
+
+def batch_specs(arch_mod, cfg, shape: Shape) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Model-input stand-ins for one cell (no params / caches)."""
+    b, s = shape.global_batch, shape.seq_len
+    fam = arch_mod.FAMILY
+    i32, f32 = jnp.int32, jnp.float32
+    if fam in ("transformer", "moe", "xlstm", "griffin"):
+        if shape.kind == "train":
+            return dict(tokens=jax.ShapeDtypeStruct((b, s), i32),
+                        labels=jax.ShapeDtypeStruct((b, s), i32))
+        n = s if shape.kind == "prefill" else 1
+        return dict(tokens=jax.ShapeDtypeStruct((b, n), i32))
+    if fam == "vlm":
+        npatch = cfg.prefix_embeds
+        nt = s - npatch
+        if shape.kind == "train":
+            return dict(
+                patches=jax.ShapeDtypeStruct((b, npatch, cfg.d_model), f32),
+                tokens=jax.ShapeDtypeStruct((b, nt), i32),
+                labels=jax.ShapeDtypeStruct((b, nt), i32),
+            )
+        if shape.kind == "prefill":
+            return dict(
+                patches=jax.ShapeDtypeStruct((b, npatch, cfg.d_model), f32),
+                tokens=jax.ShapeDtypeStruct((b, nt), i32),
+            )
+        return dict(tokens=jax.ShapeDtypeStruct((b, 1), i32))
+    if fam == "encdec":
+        sd = s // cfg.dec_ratio
+        if shape.kind == "train":
+            return dict(
+                frames=jax.ShapeDtypeStruct((b, s, cfg.d_model), f32),
+                tokens=jax.ShapeDtypeStruct((b, sd), i32),
+                labels=jax.ShapeDtypeStruct((b, sd), i32),
+            )
+        if shape.kind == "prefill":
+            return dict(
+                frames=jax.ShapeDtypeStruct((b, s, cfg.d_model), f32),
+                tokens=jax.ShapeDtypeStruct((b, sd), i32),
+            )
+        return dict(tokens=jax.ShapeDtypeStruct((b, 1), i32))
+    raise ValueError(f"no input specs for family {fam}")
+
+
+_BATCH_AXES = {
+    "tokens": ("batch", None),
+    "labels": ("batch", None),
+    "mask": ("batch", None),
+    "patches": ("batch", None, None),
+    "frames": ("batch", None, None),
+}
+
+
+def annotate_batch(specs: Dict[str, jax.ShapeDtypeStruct], mesh):
+    out = {}
+    for k, v in specs.items():
+        pspec = resolve_spec(_BATCH_AXES[k][: len(v.shape)], v.shape, mesh)
+        out[k] = jax.ShapeDtypeStruct(
+            v.shape, v.dtype, sharding=NamedSharding(mesh, pspec)
+        )
+    return out
+
+
+def _leaf_sharding(mesh, axes, shape):
+    return NamedSharding(mesh, resolve_spec(_pad_spec(axes, len(shape)), shape, mesh))
+
+
+def annotate_tree(struct_tree, specs_tree, mesh):
+    """Attach storage NamedShardings to an eval_shape pytree.
+
+    specs_tree: ParamSpec tree (prefix of struct_tree: CompressedVariable
+    leaves sit under one ParamSpec).  Leaves without a spec (opt counters,
+    rng, scalars) are replicated.
+    """
+    from repro.core.store import is_compressed
+
+    def ann(leaf, axes):
+        if not hasattr(leaf, "shape"):
+            return leaf
+        sh = (
+            _leaf_sharding(mesh, axes, leaf.shape)
+            if axes is not None
+            else NamedSharding(mesh, P())
+        )
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype, sharding=sh)
+
+    def f(spec, sub):
+        axes = spec.storage if isinstance(spec, ParamSpec) else None
+        if is_compressed(sub):
+            return type(sub)(
+                codes=ann(sub.codes, axes),
+                s=ann(sub.s, None),
+                b=ann(sub.b, None),
+                fmt=sub.fmt,
+            )
+        return jax.tree_util.tree_map(lambda l: ann(l, axes), sub)
+
+    if specs_tree is None:
+        return jax.tree_util.tree_map(
+            lambda l: ann(l, None), struct_tree, is_leaf=is_compressed
+        )
+    return jax.tree_util.tree_map(
+        f, specs_tree, struct_tree,
+        is_leaf=lambda s: isinstance(s, ParamSpec),
+    )
+
+
+def annotate_state(state_struct, specs, mesh):
+    """Storage shardings for a TrainState eval_shape tree."""
+    from repro.federated.state import TrainState
+
+    return TrainState(
+        params=annotate_tree(state_struct.params, specs, mesh),
+        opt_state=annotate_tree(state_struct.opt_state, None, mesh),
+        round=annotate_tree(state_struct.round, None, mesh),
+        rng=annotate_tree(state_struct.rng, None, mesh),
+    )
+
+
+_KV = (None, "batch", "kv_seq", "tensor", None)  # [L, B, S, KVH, hd]
+_KVPOS = (None, "batch", "kv_seq")
+
+
+def decode_state_axes(family: str, cfg, struct):
+    """Logical-axes tree matching each family's decode-state structure.
+
+    Mirrors the models' own ``state_shard_hint`` layouts (attention cache:
+    batch->data, cache-seq->model; recurrent state: batch->data,
+    feature->dstate; scalars replicated).
+    """
+    from repro.models import attention as attn
+
+    if family in ("transformer", "vlm", "moe"):
+        return attn.KVCache(k=_KV, v=_KV, pos=_KVPOS, length=())
+    if family == "encdec":
+        return dict(
+            self_kv=attn.KVCache(k=_KV, v=_KV, pos=_KVPOS, length=()),
+            cross_k=_KV, cross_v=_KV, cross_pos=_KVPOS, length=(),
+        )
+    if family == "xlstm":
+        m = dict(
+            conv=(None, None, "batch", None, "dstate"),
+            C=(None, None, "batch", None, "dstate", None),
+            n=(None, None, "batch", None, None),
+            m=(None, None, "batch", None),
+        )
+        axes = dict(
+            mlstm=m,
+            slstm=dict(c=(None, "batch", None, None), n=(None, "batch", None, None),
+                       m=(None, "batch", None, None), h=(None, "batch", None, None)),
+            length=(),
+        )
+        if "extra_m" in struct:
+            axes["extra_m"] = {k: v[1:] for k, v in m.items()}
+        return axes
+    if family == "griffin":
+        axes = dict(
+            rec=dict(conv=(None, None, "batch", None, "dstate"),
+                     h=(None, None, "batch", "dstate")),
+            att=dict(k=_KV, v=_KV, pos=_KVPOS),
+            length=(),
+        )
+        if "extra_rec" in struct:
+            axes["extra_rec"] = dict(conv=(None, "batch", None, "dstate"),
+                                     h=(None, "batch", "dstate"))
+        return axes
+    raise ValueError(f"no decode-state axes for family {family}")
+
+
+def annotate_cache(cache_struct, family: str, cfg, mesh):
+    """Attach storage NamedShardings to a decode-state eval_shape tree."""
+    axes_tree = decode_state_axes(family, cfg, cache_struct)
+
+    def ann(axes, leaf):
+        if not hasattr(leaf, "shape"):
+            return leaf
+        sh = NamedSharding(mesh, resolve_spec(axes[: leaf.ndim], leaf.shape, mesh))
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype, sharding=sh)
+
+    return jax.tree_util.tree_map(
+        ann, axes_tree, cache_struct,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x
+        ),
+    )

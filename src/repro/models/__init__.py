@@ -1,0 +1,3 @@
+"""Pure-JAX model zoo: init/apply functions, no framework dependencies."""
+
+from .registry import get_family, is_servable

@@ -1,0 +1,207 @@
+"""Conformer ASR encoder — the paper's own model family (§3.1).
+
+Block = ½·FFN → MHSA (RoPE, optionally windowed for the streaming variant)
+→ Conv module (pointwise-GLU → depthwise causal conv → **GroupNorm** →
+swish → pointwise) → ½·FFN → LayerNorm.  The paper swaps BatchNorm for
+GroupNorm because batch statistics don't transfer across non-IID federated
+clients (their ref [10]); we follow that.
+
+The audio frontend is a stub: ``batch["frames"]`` carries precomputed
+filterbank-patch embeddings [B, S, d_in]; a linear input projection maps to
+d_model.  The training objective is framewise cross-entropy against
+``batch["labels"]`` [B, S] — the synthetic-ASR surrogate task used by the
+paper-table benchmarks (DESIGN.md §2: WER -> loss parity).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import attention as attn
+from .common import (
+    Materializer,
+    ParamSpec,
+    RSPEC,
+    apply_rope,
+    dense_init,
+    group_norm,
+    layer_norm,
+    scan_blocks,
+    shard_hint,
+    softmax_xent_chunked,
+    stack_layer_params,
+    wspec,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConformerConfig:
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int
+    n_classes: int
+    d_in: int = 80
+    conv_kernel: int = 8
+    gn_groups: int = 4
+    window: Optional[int] = None  # not None -> streaming variant
+    causal_conv: bool = True
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+
+    @property
+    def hd(self) -> int:
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        d, f = self.d_model, self.d_ff
+        ffn = d * f + f + f * d + d + 2 * d
+        att = 4 * d * d + 2 * d
+        conv = d * 2 * d + self.conv_kernel * d + d * d + 4 * d + 2 * d
+        blk = 2 * ffn + att + conv + 2 * d
+        return self.n_layers * blk + self.d_in * d + d + d * self.n_classes + self.n_classes
+
+
+def _block_init(key, cfg: ConformerConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 10)
+    d, f = cfg.d_model, cfg.d_ff
+
+    def ffn(k1, k2):
+        return dict(
+            scale=jnp.ones((d,)), bias=jnp.zeros((d,)),
+            w1=dense_init(k1, d, f), b1=jnp.zeros((f,)),
+            w2=dense_init(k2, f, d), b2=jnp.zeros((d,)),
+        )
+
+    p = dict(
+        ffn1=ffn(ks[0], ks[1]),
+        attn_scale=jnp.ones((d,)), attn_bias=jnp.zeros((d,)),
+        wq=dense_init(ks[2], d, d), wk=dense_init(ks[3], d, d),
+        wv=dense_init(ks[4], d, d), wo=dense_init(ks[5], d, d),
+        conv_scale=jnp.ones((d,)), conv_bias=jnp.zeros((d,)),
+        conv_pw1=dense_init(ks[6], d, 2 * d),
+        conv_dw=(jax.random.normal(ks[7], (cfg.conv_kernel, d)) * 0.1),
+        conv_gn_scale=jnp.ones((d,)), conv_gn_bias=jnp.zeros((d,)),
+        conv_pw2=dense_init(ks[8], d, d),
+        ffn2=ffn(ks[9], ks[0]),
+        out_scale=jnp.ones((d,)), out_bias=jnp.zeros((d,)),
+    )
+    return jax.tree_util.tree_map(lambda a: jnp.asarray(a, jnp.float32), p)
+
+
+def _ffn_specs():
+    return dict(scale=RSPEC, bias=RSPEC, w1=wspec("fsdp", "tensor"),
+                b1=wspec("tensor"), w2=wspec("tensor", "fsdp"), b2=RSPEC)
+
+
+def block_specs(cfg: ConformerConfig) -> Dict[str, Any]:
+    return dict(
+        ffn1=_ffn_specs(),
+        attn_scale=RSPEC, attn_bias=RSPEC,
+        wq=wspec("fsdp", "tensor"), wk=wspec("fsdp", "tensor"),
+        wv=wspec("fsdp", "tensor"), wo=wspec("tensor", "fsdp"),
+        conv_scale=RSPEC, conv_bias=RSPEC,
+        conv_pw1=wspec("fsdp", "tensor"),
+        conv_dw=ParamSpec(storage=(None, "tensor"), gathered=(None, "tensor")),
+        conv_gn_scale=RSPEC, conv_gn_bias=RSPEC,
+        conv_pw2=wspec("tensor", "fsdp"),
+        ffn2=_ffn_specs(),
+        out_scale=RSPEC, out_bias=RSPEC,
+    )
+
+
+def init(key, cfg: ConformerConfig) -> Dict[str, Any]:
+    kb, ki, ko = jax.random.split(key, 3)
+    return dict(
+        in_proj=dense_init(ki, cfg.d_in, cfg.d_model),
+        in_bias=jnp.zeros((cfg.d_model,), jnp.float32),
+        blocks=stack_layer_params(
+            [_block_init(k, cfg) for k in jax.random.split(kb, cfg.n_layers)]
+        ),
+        out_proj=dense_init(ko, cfg.d_model, cfg.n_classes),
+        out_bias=jnp.zeros((cfg.n_classes,), jnp.float32),
+    )
+
+
+def param_specs(cfg: ConformerConfig) -> Dict[str, Any]:
+    return dict(
+        in_proj=wspec("fsdp", None), in_bias=RSPEC,
+        blocks=block_specs(cfg),
+        out_proj=wspec("fsdp", "tensor"), out_bias=wspec("tensor"),
+    )
+
+
+def _half_ffn(x, p, eps):
+    h = layer_norm(x, p["scale"], p["bias"], eps)
+    h = jax.nn.silu(h @ p["w1"] + p["b1"])
+    h = shard_hint(h, "batch", None, "tensor")
+    return x + 0.5 * (h @ p["w2"] + p["b2"])
+
+
+def _conv_module(cfg, w, x):
+    h = layer_norm(x, w["conv_scale"], w["conv_bias"], cfg.norm_eps)
+    h = h @ w["conv_pw1"]  # [B, S, 2D]
+    h = shard_hint(h, "batch", None, "tensor")
+    a, g = jnp.split(h, 2, axis=-1)
+    h = a * jax.nn.sigmoid(g)  # GLU
+    k = cfg.conv_kernel
+    if cfg.causal_conv:
+        hp = jnp.pad(h, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        hp = jnp.pad(h, ((0, 0), ((k - 1) // 2, k - 1 - (k - 1) // 2), (0, 0)))
+    h = sum(hp[:, i : i + x.shape[1]] * w["conv_dw"][i] for i in range(k))
+    h = group_norm(h, w["conv_gn_scale"], w["conv_gn_bias"], cfg.gn_groups, cfg.norm_eps)
+    h = jax.nn.silu(h)
+    return x + h @ w["conv_pw2"]
+
+
+def _block_apply(cfg: ConformerConfig, w, x, positions):
+    b, s, d = x.shape
+    x = _half_ffn(x, w["ffn1"], cfg.norm_eps)
+    h = layer_norm(x, w["attn_scale"], w["attn_bias"], cfg.norm_eps)
+    q = (h @ w["wq"]).reshape(b, s, cfg.n_heads, cfg.hd)
+    k = (h @ w["wk"]).reshape(b, s, cfg.n_heads, cfg.hd)
+    v = (h @ w["wv"]).reshape(b, s, cfg.n_heads, cfg.hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    causal = cfg.window is not None  # streaming variant is causal+windowed
+    o = attn.attend(q, k, v, positions, positions, causal=causal, window=cfg.window)
+    x = x + shard_hint(o.reshape(b, s, d) @ w["wo"], "batch", None, None)
+    x = _conv_module(cfg, w, x)
+    x = _half_ffn(x, w["ffn2"], cfg.norm_eps)
+    return layer_norm(x, w["out_scale"], w["out_bias"], cfg.norm_eps)
+
+
+def forward(cfg: ConformerConfig, params, batch, mat: Materializer):
+    frames = batch["frames"].astype(jnp.float32)
+    inw = mat({"in_proj": params["in_proj"]}, {"in_proj": wspec("fsdp", None)})
+    x = shard_hint(frames @ inw["in_proj"] + mat.leaf(params["in_bias"]), "batch", None, None)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(carry, w, _):
+        return _block_apply(cfg, w, carry, positions)
+
+    return scan_blocks(body, params["blocks"], x, mat, block_specs(cfg))
+
+
+def loss(cfg: ConformerConfig, params, batch, mat: Materializer) -> jax.Array:
+    hidden = forward(cfg, params, batch, mat)
+    head = mat({"h": params["out_proj"]}, {"h": wspec("fsdp", "tensor")})["h"]
+    # framewise CE; out_bias folded in by augmenting hidden with ones column
+    logits_bias = mat.leaf(params["out_bias"])
+    return softmax_xent_chunked(
+        hidden, head, batch["labels"], batch.get("mask")
+    ) if logits_bias is None else _loss_with_bias(cfg, hidden, head, logits_bias, batch)
+
+
+def _loss_with_bias(cfg, hidden, head, bias, batch):
+    b, s, d = hidden.shape
+    hidden_aug = jnp.concatenate([hidden, jnp.ones((b, s, 1), hidden.dtype)], -1)
+    head_aug = jnp.concatenate([head, bias[None, :]], 0)
+    return softmax_xent_chunked(hidden_aug, head_aug, batch["labels"], batch.get("mask"))

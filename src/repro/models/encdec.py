@@ -1,0 +1,377 @@
+"""Encoder-decoder transformer (seamless-m4t-medium backbone).
+
+The audio frontend is a STUB per the brief: ``batch["frames"]`` carries
+precomputed frame embeddings [B, S_enc, d_model] (what the real model's
+fbank+conformer-adaptor stack would emit).  The encoder is bidirectional
+MHA; the decoder adds causal self-attention plus cross-attention to the
+encoder memory.  Decoder length is seq_len // 4 (speech-to-text ratio;
+DESIGN.md §6).
+
+Serving: ``prefill`` runs the encoder once, caches per-layer cross-KV
+(compute-once, standard for enc-dec serving) and prefills the decoder
+self-cache; ``decode_step`` extends the decoder by one token.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import attention as attn
+from .common import (
+    Materializer,
+    ParamSpec,
+    RSPEC,
+    apply_rope,
+    dense_init,
+    embed_init,
+    gelu_mlp,
+    layer_norm,
+    scan_blocks,
+    shard_hint,
+    softmax_xent_chunked,
+    stack_layer_params,
+    wspec,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    n_enc_layers: int
+    n_dec_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    dec_ratio: int = 4  # dec_len = enc_len // dec_ratio for train shapes
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+
+    @property
+    def hd(self) -> int:
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        d, f = self.d_model, self.d_ff
+        att = d * (self.n_heads + 2 * self.n_kv_heads) * self.hd + self.n_heads * self.hd * d
+        mlp = 2 * d * f + d + f
+        enc = att + mlp + 4 * d
+        dec = 2 * att + mlp + 6 * d
+        return (
+            self.n_enc_layers * enc + self.n_dec_layers * dec
+            + 2 * self.vocab * d + 2 * d
+        )
+
+
+def _attn_params(key, cfg: EncDecConfig, prefix=""):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    return {
+        prefix + "wq": dense_init(ks[0], d, cfg.n_heads * cfg.hd),
+        prefix + "wk": dense_init(ks[1], d, cfg.n_kv_heads * cfg.hd),
+        prefix + "wv": dense_init(ks[2], d, cfg.n_kv_heads * cfg.hd),
+        prefix + "wo": dense_init(ks[3], cfg.n_heads * cfg.hd, d),
+    }
+
+
+def _attn_specs(prefix=""):
+    return {
+        prefix + "wq": wspec("fsdp", "tensor"),
+        prefix + "wk": wspec("fsdp", "tensor"),
+        prefix + "wv": wspec("fsdp", "tensor"),
+        prefix + "wo": wspec("tensor", "fsdp"),
+    }
+
+
+def _enc_block_init(key, cfg: EncDecConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    p = dict(
+        attn_scale=jnp.ones((d,)), attn_bias=jnp.zeros((d,)),
+        mlp_scale=jnp.ones((d,)), mlp_bias=jnp.zeros((d,)),
+        w1=dense_init(k1, d, f), b1=jnp.zeros((f,)),
+        w2=dense_init(k2, f, d), b2=jnp.zeros((d,)),
+    )
+    p.update(_attn_params(k3, cfg))
+    return jax.tree_util.tree_map(lambda a: a.astype(jnp.float32), p)
+
+
+def _dec_block_init(key, cfg: EncDecConfig):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d, f = cfg.d_model, cfg.d_ff
+    p = dict(
+        self_scale=jnp.ones((d,)), self_bias=jnp.zeros((d,)),
+        cross_scale=jnp.ones((d,)), cross_bias=jnp.zeros((d,)),
+        mlp_scale=jnp.ones((d,)), mlp_bias=jnp.zeros((d,)),
+        w1=dense_init(k1, d, f), b1=jnp.zeros((f,)),
+        w2=dense_init(k2, f, d), b2=jnp.zeros((d,)),
+    )
+    p.update(_attn_params(k3, cfg))
+    p.update(_attn_params(k4, cfg, prefix="c_"))
+    return jax.tree_util.tree_map(lambda a: a.astype(jnp.float32), p)
+
+
+def _enc_specs():
+    s = dict(
+        attn_scale=RSPEC, attn_bias=RSPEC, mlp_scale=RSPEC, mlp_bias=RSPEC,
+        w1=wspec("fsdp", "tensor"), b1=wspec("tensor"),
+        w2=wspec("tensor", "fsdp"), b2=RSPEC,
+    )
+    s.update(_attn_specs())
+    return s
+
+
+def _dec_specs():
+    s = dict(
+        self_scale=RSPEC, self_bias=RSPEC, cross_scale=RSPEC, cross_bias=RSPEC,
+        mlp_scale=RSPEC, mlp_bias=RSPEC,
+        w1=wspec("fsdp", "tensor"), b1=wspec("tensor"),
+        w2=wspec("tensor", "fsdp"), b2=RSPEC,
+    )
+    s.update(_attn_specs())
+    s.update(_attn_specs("c_"))
+    return s
+
+
+def init(key, cfg: EncDecConfig) -> Dict[str, Any]:
+    ke, kd, kt, kh = jax.random.split(key, 4)
+    params = dict(
+        embed=embed_init(kt, cfg.vocab, cfg.d_model),
+        enc_blocks=stack_layer_params(
+            [_enc_block_init(k, cfg) for k in jax.random.split(ke, cfg.n_enc_layers)]
+        ),
+        dec_blocks=stack_layer_params(
+            [_dec_block_init(k, cfg) for k in jax.random.split(kd, cfg.n_dec_layers)]
+        ),
+        enc_norm_scale=jnp.ones((cfg.d_model,), jnp.float32),
+        enc_norm_bias=jnp.zeros((cfg.d_model,), jnp.float32),
+        dec_norm_scale=jnp.ones((cfg.d_model,), jnp.float32),
+        dec_norm_bias=jnp.zeros((cfg.d_model,), jnp.float32),
+        lm_head=dense_init(kh, cfg.d_model, cfg.vocab),
+    )
+    return params
+
+
+def param_specs(cfg: EncDecConfig) -> Dict[str, Any]:
+    return dict(
+        embed=ParamSpec(storage=("fsdp", "tensor"), gathered=(None, "tensor")),
+        enc_blocks=_enc_specs(),
+        dec_blocks=_dec_specs(),
+        enc_norm_scale=RSPEC, enc_norm_bias=RSPEC,
+        dec_norm_scale=RSPEC, dec_norm_bias=RSPEC,
+        lm_head=wspec("fsdp", "tensor"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _mha(cfg, w, x, kv_x, q_pos, k_pos, causal, prefix="",
+         cache=None, position=None, window=None):
+    """Shared attention wrapper; cache (k,v,pos) -> decode path."""
+    b, s, d = x.shape
+    q = (x @ w[prefix + "wq"]).reshape(b, s, cfg.n_heads, cfg.hd)
+    if cache is not None and kv_x is None:
+        # cross-attention decode: KV precomputed
+        kc, vc, pc = cache
+        q = apply_rope(q, q_pos, cfg.rope_theta) if causal else q
+        o = attn.decode_attend(q, kc, vc, pc, position, window=window, causal=causal)
+        new_cache = cache
+    else:
+        src = x if kv_x is None else kv_x
+        sk = src.shape[1]
+        k = (src @ w[prefix + "wk"]).reshape(b, sk, cfg.n_kv_heads, cfg.hd)
+        v = (src @ w[prefix + "wv"]).reshape(b, sk, cfg.n_kv_heads, cfg.hd)
+        if causal:  # rope only on the causal (self) stream
+            q = apply_rope(q, q_pos, cfg.rope_theta)
+            k = apply_rope(k, k_pos, cfg.rope_theta)
+        if cache is not None:
+            kc, vc, pc = cache
+            kc, vc, pc = attn.cache_insert(kc, vc, pc, k, v, position, ring=False)
+            o = attn.decode_attend(q, kc, vc, pc, position, window=window)
+            new_cache = (kc, vc, pc)
+        else:
+            o = attn.attend(q, k, v, q_pos, k_pos, causal=causal, window=window)
+            new_cache = (k, v, k_pos)
+    o = o.reshape(b, s, cfg.n_heads * cfg.hd)
+    return shard_hint(o @ w[prefix + "wo"], "batch", None, None), new_cache
+
+
+def encode(cfg: EncDecConfig, params, frames, mat: Materializer):
+    """frames [B, S_enc, D] -> encoder memory [B, S_enc, D]."""
+    x = shard_hint(frames.astype(jnp.float32), "batch", None, None)
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def body(x_, w, _):
+        h = layer_norm(x_, w["attn_scale"], w["attn_bias"], cfg.norm_eps)
+        o, _ = _mha(cfg, w, h, None, pos, pos, causal=False)
+        x_ = x_ + o
+        h = layer_norm(x_, w["mlp_scale"], w["mlp_bias"], cfg.norm_eps)
+        return x_ + gelu_mlp(h, w["w1"], w["b1"], w["w2"], w["b2"])
+
+    x = scan_blocks(body, params["enc_blocks"], x, mat, _enc_specs())
+    return layer_norm(x, mat.leaf(params["enc_norm_scale"]), mat.leaf(params["enc_norm_bias"]), cfg.norm_eps)
+
+
+def decode_train(cfg: EncDecConfig, params, tokens, memory, mat: Materializer):
+    emb_w = mat({"embed": params["embed"]}, {"embed": param_specs(cfg)["embed"]})
+    x = shard_hint(jnp.take(emb_w["embed"], tokens, axis=0), "batch", None, None)
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    mem_pos = jnp.broadcast_to(
+        jnp.arange(memory.shape[1], dtype=jnp.int32), (b, memory.shape[1])
+    )
+
+    def body(x_, w, _):
+        h = layer_norm(x_, w["self_scale"], w["self_bias"], cfg.norm_eps)
+        o, _ = _mha(cfg, w, h, None, pos, pos, causal=True)
+        x_ = x_ + o
+        h = layer_norm(x_, w["cross_scale"], w["cross_bias"], cfg.norm_eps)
+        o, _ = _mha(cfg, w, h, memory, pos, mem_pos, causal=False, prefix="c_")
+        x_ = x_ + o
+        h = layer_norm(x_, w["mlp_scale"], w["mlp_bias"], cfg.norm_eps)
+        return x_ + gelu_mlp(h, w["w1"], w["b1"], w["w2"], w["b2"])
+
+    x = scan_blocks(body, params["dec_blocks"], x, mat, _dec_specs())
+    return layer_norm(x, mat.leaf(params["dec_norm_scale"]), mat.leaf(params["dec_norm_bias"]), cfg.norm_eps)
+
+
+def loss(cfg: EncDecConfig, params, batch, mat: Materializer) -> jax.Array:
+    memory = encode(cfg, params, batch["frames"], mat)
+    hidden = decode_train(cfg, params, batch["tokens"], memory, mat)
+    head = mat({"h": params["lm_head"]}, {"h": wspec("fsdp", "tensor")})["h"]
+    return softmax_xent_chunked(hidden, head, batch["labels"], batch.get("mask"))
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: EncDecConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """max_len = encoder length; decoder buffer = max_len // dec_ratio."""
+    dec_buf = max(max_len // cfg.dec_ratio, 8)
+    return dict(
+        self_kv=attn.init_cache(cfg.n_dec_layers, batch, dec_buf,
+                                cfg.n_kv_heads, cfg.hd, dtype),
+        cross_k=jnp.zeros((cfg.n_dec_layers, batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+        cross_v=jnp.zeros((cfg.n_dec_layers, batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+        cross_pos=jnp.full((cfg.n_dec_layers, batch, max_len), -1, jnp.int32),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def _state_hint(state):
+    f = shard_hint
+    return dict(
+        self_kv=attn.cache_shard_hint(state["self_kv"]),
+        cross_k=f(state["cross_k"], None, "batch", "kv_seq", "tensor", None),
+        cross_v=f(state["cross_v"], None, "batch", "kv_seq", "tensor", None),
+        cross_pos=f(state["cross_pos"], None, "batch", "kv_seq"),
+        length=state["length"],
+    )
+
+
+def prefill(cfg: EncDecConfig, params, batch, mat: Materializer, state):
+    """Encoder pass + cross-KV precompute + decoder prompt prefill."""
+    memory = encode(cfg, params, batch["frames"], mat)
+    b, s_enc, _ = memory.shape
+    tokens = batch["tokens"]
+    s_dec = tokens.shape[1]
+    specs = _dec_specs()
+    mem_pos = jnp.broadcast_to(jnp.arange(s_enc, dtype=jnp.int32), (b, s_enc))
+
+    emb_w = mat({"embed": params["embed"]}, {"embed": param_specs(cfg)["embed"]})
+    x = shard_hint(jnp.take(emb_w["embed"], tokens, axis=0), "batch", None, None)
+    pos = jnp.broadcast_to(jnp.arange(s_dec, dtype=jnp.int32), (b, s_dec))
+    buf = state["self_kv"].buf_len
+    kv_dtype = state["self_kv"].k.dtype
+
+    def body_fn(x_, xs):
+        w = mat(xs[0], specs)
+        h = layer_norm(x_, w["self_scale"], w["self_bias"], cfg.norm_eps)
+        q = (h @ w["wq"]).reshape(b, s_dec, cfg.n_heads, cfg.hd)
+        k = (h @ w["wk"]).reshape(b, s_dec, cfg.n_kv_heads, cfg.hd)
+        v = (h @ w["wv"]).reshape(b, s_dec, cfg.n_kv_heads, cfg.hd)
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k = apply_rope(k, pos, cfg.rope_theta)
+        o = attn.attend(q, k, v, pos, pos, causal=True)
+        x_ = x_ + shard_hint(o.reshape(b, s_dec, -1) @ w["wo"], "batch", None, None)
+        h = layer_norm(x_, w["cross_scale"], w["cross_bias"], cfg.norm_eps)
+        ck = (memory @ w["c_wk"]).reshape(b, s_enc, cfg.n_kv_heads, cfg.hd)
+        cv = (memory @ w["c_wv"]).reshape(b, s_enc, cfg.n_kv_heads, cfg.hd)
+        o, _ = _mha(cfg, w, h, memory, pos, mem_pos, causal=False, prefix="c_")
+        x_ = x_ + o
+        h = layer_norm(x_, w["mlp_scale"], w["mlp_bias"], cfg.norm_eps)
+        x_ = x_ + gelu_mlp(h, w["w1"], w["b1"], w["w2"], w["b2"])
+        # stack decoder self-KV (left-aligned) and cross-KV
+        t = min(buf, s_dec)
+        kc, vc, pc = k[:, :t], v[:, :t], pos[:, :t]
+        if t < buf:
+            pad = buf - t
+            kc = jnp.pad(kc, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            vc = jnp.pad(vc, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            pc = jnp.pad(pc, ((0, 0), (0, pad)), constant_values=-1)
+        return x_, (kc.astype(kv_dtype), vc.astype(kv_dtype),
+                    pc, ck.astype(kv_dtype), cv.astype(kv_dtype))
+
+    body_fn = jax.checkpoint(body_fn, prevent_cse=False)
+    x, (ks, vs, ps, cks, cvs) = jax.lax.scan(body_fn, x, (params["dec_blocks"], None))
+    x = layer_norm(x, mat.leaf(params["dec_norm_scale"]), mat.leaf(params["dec_norm_bias"]), cfg.norm_eps)
+    head = mat({"h": params["lm_head"]}, {"h": wspec("fsdp", "tensor")})["h"]
+    logits = x[:, -1:] @ head
+    new_state = _state_hint(dict(
+        self_kv=attn.KVCache(k=ks, v=vs, pos=ps, length=jnp.asarray(s_dec, jnp.int32)),
+        cross_k=cks, cross_v=cvs,
+        cross_pos=jnp.broadcast_to(mem_pos, (cfg.n_dec_layers,) + mem_pos.shape),
+        length=jnp.asarray(s_dec, jnp.int32),
+    ))
+    return new_state, shard_hint(logits, "batch", None, "tensor")
+
+
+def decode_step(cfg: EncDecConfig, params, state, tokens, mat: Materializer):
+    b = tokens.shape[0]
+    emb_w = mat({"embed": params["embed"]}, {"embed": param_specs(cfg)["embed"]})
+    x = shard_hint(jnp.take(emb_w["embed"], tokens, axis=0), "batch", None, None)
+    position = state["length"]
+    pos = jnp.full((b, 1), position, jnp.int32)
+    specs = _dec_specs()
+    sk = state["self_kv"]
+
+    def body(x_, xs):
+        w_layer, (kc, vc, pc, ck, cv, cp) = xs
+        w = mat(w_layer, specs)
+        h = layer_norm(x_, w["self_scale"], w["self_bias"], cfg.norm_eps)
+        o, (kc, vc, pc) = _mha(cfg, w, h, h, pos, pos, causal=True,
+                               cache=(kc, vc, pc), position=position)
+        x_ = x_ + o
+        h = layer_norm(x_, w["cross_scale"], w["cross_bias"], cfg.norm_eps)
+        o, _ = _mha(cfg, w, h, None, pos, None, causal=False, prefix="c_",
+                    cache=(ck, cv, cp), position=position)
+        x_ = x_ + o
+        h = layer_norm(x_, w["mlp_scale"], w["mlp_bias"], cfg.norm_eps)
+        x_ = x_ + gelu_mlp(h, w["w1"], w["b1"], w["w2"], w["b2"])
+        return x_, (kc, vc, pc)
+
+    x, (ks, vs, ps) = jax.lax.scan(
+        body, x,
+        (params["dec_blocks"],
+         (sk.k, sk.v, sk.pos, state["cross_k"], state["cross_v"], state["cross_pos"])),
+    )
+    x = layer_norm(x, mat.leaf(params["dec_norm_scale"]), mat.leaf(params["dec_norm_bias"]), cfg.norm_eps)
+    head = mat({"h": params["lm_head"]}, {"h": wspec("fsdp", "tensor")})["h"]
+    logits = x @ head
+    new_state = _state_hint(dict(
+        self_kv=attn.KVCache(k=ks, v=vs, pos=ps, length=sk.length + 1),
+        cross_k=state["cross_k"], cross_v=state["cross_v"],
+        cross_pos=state["cross_pos"], length=state["length"] + 1,
+    ))
+    return new_state, shard_hint(logits, "batch", None, "tensor")

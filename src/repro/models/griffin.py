@@ -1,0 +1,460 @@
+"""Griffin / RecurrentGemma hybrid (RG-LRU recurrent blocks + local attention).
+
+Structure follows arXiv:2402.19427: residual blocks in a repeating
+(recurrent, recurrent, attention) pattern — 1 attention per 3 mixers — each
+followed by a GeGLU MLP.  The recurrent mixer is the RG-LRU: a *diagonal*
+gated linear recurrence
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+which is associative, so train/prefill run it with ``lax.associative_scan``
+(log-depth, sequence-parallelizable) instead of a sequential time loop —
+this is the TPU-native adaptation of the paper's linear-scan CUDA kernel.
+
+Sharding: the LRU width is sharded over `dstate` -> `model` (recurrence is
+elementwise, zero per-step collectives); attention uses the shared GQA/MQA
+path (q-block sharding); MLP is column/row-parallel.
+
+OMC applicability (DESIGN.md §6): all projection matrices quantize; the
+RG-LRU recurrence parameters (Λ, gate biases — tiny and sensitive) are
+excluded via the weights-only policy (they are 1-D).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import attention as attn
+from .common import (
+    Materializer,
+    ParamSpec,
+    RSPEC,
+    apply_rope,
+    dense_init,
+    embed_init,
+    rms_norm,
+    shard_hint,
+    softmax_xent_chunked,
+    stack_layer_params,
+    wspec,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class GriffinConfig:
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    lru_width: Optional[int] = None  # defaults to d_model
+    window: int = 2048
+    conv_kernel: int = 4
+    pattern_period: int = 3  # 1 attention block per period
+    rope_theta: float = 10_000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+    a_param_init: float = 0.95  # initial recurrence magnitude
+
+    @property
+    def lru(self) -> int:
+        return self.lru_width or self.d_model
+
+    @property
+    def hd(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def n_super(self) -> int:
+        return self.n_layers // self.pattern_period
+
+    @property
+    def rec_per_super(self) -> int:
+        return self.pattern_period - 1
+
+    @property
+    def n_extra_rec(self) -> int:
+        return self.n_layers - self.n_super * self.pattern_period
+
+    def param_count(self) -> int:
+        d, f, r = self.d_model, self.d_ff, self.lru
+        mlp = 3 * d * f + d
+        rec = 2 * d * r + self.conv_kernel * r + 2 * r + 2 * r + r * d + d + mlp
+        att = d * (self.n_heads + 2 * self.n_kv_heads) * self.hd + self.n_heads * self.hd * d + d + mlp
+        n_att = self.n_super
+        n_rec = self.n_layers - n_att
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return n_rec * rec + n_att * att + emb + d
+
+
+# ---------------------------------------------------------------------------
+# init / specs
+# ---------------------------------------------------------------------------
+
+
+def _rec_init(key, cfg: GriffinConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 7)
+    d, r, f = cfg.d_model, cfg.lru, cfg.d_ff
+    # Λ init so that a_t = exp(-8·softplus(Λ)·r) equals a_param_init at r=1
+    s0 = -np.log(cfg.a_param_init) / 8.0
+    lam = float(np.log(np.expm1(s0)))
+    return dict(
+        norm=jnp.ones((d,), jnp.float32),
+        w_x=dense_init(ks[0], d, r),  # main branch
+        w_gate=dense_init(ks[1], d, r),  # gelu gate branch
+        conv_w=(jax.random.normal(ks[2], (cfg.conv_kernel, r)) * 0.1).astype(jnp.float32),
+        lam=jnp.full((r,), lam, jnp.float32),  # RG-LRU Λ (excluded from OMC)
+        w_rg=dense_init(ks[3], r, r, scale=0.5),  # recurrence gate proj
+        b_rg=jnp.zeros((r,), jnp.float32),
+        w_ig=dense_init(ks[4], r, r, scale=0.5),  # input gate proj
+        b_ig=jnp.zeros((r,), jnp.float32),
+        w_out=dense_init(ks[5], r, d),
+        mlp_norm=jnp.ones((d,), jnp.float32),
+        w1=dense_init(ks[6], d, f),
+        w3=dense_init(ks[0], d, f),
+        w2=dense_init(ks[1], f, d),
+    )
+
+
+def _att_init(key, cfg: GriffinConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 7)
+    d, f = cfg.d_model, cfg.d_ff
+    return dict(
+        norm=jnp.ones((d,), jnp.float32),
+        wq=dense_init(ks[0], d, cfg.n_heads * cfg.hd),
+        wk=dense_init(ks[1], d, cfg.n_kv_heads * cfg.hd),
+        wv=dense_init(ks[2], d, cfg.n_kv_heads * cfg.hd),
+        wo=dense_init(ks[3], cfg.n_heads * cfg.hd, d),
+        mlp_norm=jnp.ones((d,), jnp.float32),
+        w1=dense_init(ks[4], d, f),
+        w3=dense_init(ks[5], d, f),
+        w2=dense_init(ks[6], f, d),
+    )
+
+
+def _rec_specs() -> Dict[str, ParamSpec]:
+    return dict(
+        norm=RSPEC,
+        w_x=wspec("fsdp", "dstate"),
+        w_gate=wspec("fsdp", "dstate"),
+        conv_w=ParamSpec(storage=(None, "dstate"), gathered=(None, "dstate")),
+        lam=ParamSpec(storage=("dstate",), gathered=("dstate",)),
+        w_rg=wspec("fsdp", "dstate"),
+        b_rg=ParamSpec(storage=("dstate",), gathered=("dstate",)),
+        w_ig=wspec("fsdp", "dstate"),
+        b_ig=ParamSpec(storage=("dstate",), gathered=("dstate",)),
+        w_out=wspec("dstate", "fsdp"),
+        mlp_norm=RSPEC,
+        w1=wspec("fsdp", "tensor"),
+        w3=wspec("fsdp", "tensor"),
+        w2=wspec("tensor", "fsdp"),
+    )
+
+
+def _att_specs() -> Dict[str, ParamSpec]:
+    return dict(
+        norm=RSPEC,
+        wq=wspec("fsdp", "tensor"),
+        wk=wspec("fsdp", "tensor"),
+        wv=wspec("fsdp", "tensor"),
+        wo=wspec("tensor", "fsdp"),
+        mlp_norm=RSPEC,
+        w1=wspec("fsdp", "tensor"),
+        w3=wspec("fsdp", "tensor"),
+        w2=wspec("tensor", "fsdp"),
+    )
+
+
+def init(key, cfg: GriffinConfig) -> Dict[str, Any]:
+    kr, ka, ke, kx = jax.random.split(key, 4)
+    n_rec_stacked = cfg.n_super * cfg.rec_per_super
+    rec = stack_layer_params(
+        [_rec_init(k, cfg) for k in jax.random.split(kr, max(n_rec_stacked, 1))]
+    )
+    rec = jax.tree_util.tree_map(
+        lambda a: a.reshape((cfg.n_super, cfg.rec_per_super) + a.shape[1:]), rec
+    )
+    att = stack_layer_params(
+        [_att_init(k, cfg) for k in jax.random.split(ka, max(cfg.n_super, 1))]
+    )
+    params = dict(
+        embed=embed_init(ke, cfg.vocab, cfg.d_model),
+        super_blocks=dict(rec=rec, att=att),
+        final_norm=jnp.ones((cfg.d_model,), jnp.float32),
+    )
+    if cfg.n_extra_rec:
+        params["extra_rec"] = stack_layer_params(
+            [_rec_init(k, cfg) for k in jax.random.split(kx, cfg.n_extra_rec)]
+        )
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ke, cfg.d_model, cfg.vocab)
+    return params
+
+
+def param_specs(cfg: GriffinConfig) -> Dict[str, Any]:
+    specs = dict(
+        embed=ParamSpec(storage=("fsdp", "tensor"), gathered=(None, "tensor")),
+        super_blocks=dict(rec=_rec_specs(), att=_att_specs()),
+        final_norm=RSPEC,
+    )
+    if cfg.n_extra_rec:
+        specs["extra_rec"] = _rec_specs()
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = wspec("fsdp", "tensor")
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+
+def _rg_lru(x: jax.Array, w, h0: Optional[jax.Array] = None):
+    """x [B, S, R] -> (y [B, S, R], h_last [B, R]) via associative scan.
+
+    a_t = sigmoid(Λ)^(8·r_t),  r_t = sigmoid(x_t @ w_rg + b_rg)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t²) · (i_t ⊙ x_t),  i_t = sigmoid(x @ w_ig + b_ig)
+    """
+    r_gate = jax.nn.sigmoid(x @ w["w_rg"] + w["b_rg"])
+    i_gate = jax.nn.sigmoid(x @ w["w_ig"] + w["b_ig"])
+    log_a = -8.0 * r_gate * jax.nn.softplus(w["lam"])
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i_gate * x)
+
+    if h0 is not None:
+        # fold the carried state into the first step's additive term
+        b = b.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1]
+
+
+def rec_block(cfg: GriffinConfig, w, x, positions=None, conv_carry=None, h0=None):
+    """Recurrent mixer + MLP.  Returns (x', (conv_carry', h_last))."""
+    del positions
+    dtype_in = x.dtype
+    hin = rms_norm(x, w["norm"], cfg.norm_eps)
+    gate = jax.nn.gelu(shard_hint(hin @ w["w_gate"], "batch", None, "dstate"))
+    main = shard_hint(hin @ w["w_x"], "batch", None, "dstate")
+    main, conv_carry = _causal_conv(main, w["conv_w"], conv_carry)
+    y, h_last = _rg_lru(main, w, h0)
+    y = y * gate
+    x = x + shard_hint(y @ w["w_out"], "batch", None, None)
+    h2 = rms_norm(x, w["mlp_norm"], cfg.norm_eps)
+    h2 = jax.nn.gelu(shard_hint(h2 @ w["w1"], "batch", None, "tensor")) * (h2 @ w["w3"])
+    x = (x + shard_hint(h2 @ w["w2"], "batch", None, None)).astype(dtype_in)
+    return x, (conv_carry, h_last)
+
+
+def _causal_conv(x, conv_w, carry=None):
+    k = conv_w.shape[0]
+    if carry is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([carry.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * conv_w[i] for i in range(k))
+    new_carry = xp[:, -(k - 1):] if k > 1 else None
+    return y, new_carry
+
+
+def att_block(cfg: GriffinConfig, w, x, positions, cache_slice=None, position=None):
+    """Local-attention mixer + MLP.  Train (cache_slice=None) or decode."""
+    b, s, d = x.shape
+    dtype_in = x.dtype
+    hin = rms_norm(x, w["norm"], cfg.norm_eps)
+    q = (hin @ w["wq"]).reshape(b, s, cfg.n_heads, cfg.hd)
+    k = (hin @ w["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    v = (hin @ w["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if cache_slice is None:
+        o = attn.attend(q, k, v, positions, positions, causal=True, window=cfg.window)
+        new_cache = (k, v, positions)
+    else:
+        kc, vc, pc = cache_slice
+        kc, vc, pc = attn.cache_insert(kc, vc, pc, k, v, position, ring=True)
+        o = attn.decode_attend(q, kc, vc, pc, position, window=cfg.window)
+        new_cache = (kc, vc, pc)
+    o = o.reshape(b, s, cfg.n_heads * cfg.hd)
+    x = x + shard_hint(o @ w["wo"], "batch", None, None)
+    h2 = rms_norm(x, w["mlp_norm"], cfg.norm_eps)
+    h2 = jax.nn.gelu(shard_hint(h2 @ w["w1"], "batch", None, "tensor")) * (h2 @ w["w3"])
+    x = (x + shard_hint(h2 @ w["w2"], "batch", None, None)).astype(dtype_in)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg: GriffinConfig, params, batch, mat: Materializer):
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    emb_w = mat({"embed": params["embed"]}, {"embed": param_specs(cfg)["embed"]})
+    x = shard_hint(jnp.take(emb_w["embed"], tokens, axis=0), "batch", None, None)
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def super_body(x_, super_params):
+        def r_body(c, w_layer):
+            out, _ = rec_block(cfg, mat(w_layer, _rec_specs()), c)
+            return out, None
+
+        x_, _ = jax.lax.scan(
+            jax.checkpoint(r_body, prevent_cse=False), x_, super_params["rec"]
+        )
+        x_, _ = att_block(cfg, mat(super_params["att"], _att_specs()), x_, positions)
+        return x_, None
+
+    x, _ = jax.lax.scan(
+        jax.checkpoint(super_body, prevent_cse=False), x, params["super_blocks"]
+    )
+    if cfg.n_extra_rec:
+        def r_body2(c, w_layer):
+            out, _ = rec_block(cfg, mat(w_layer, _rec_specs()), c)
+            return out, None
+
+        x, _ = jax.lax.scan(
+            jax.checkpoint(r_body2, prevent_cse=False), x, params["extra_rec"]
+        )
+    return rms_norm(x, mat.leaf(params["final_norm"]), cfg.norm_eps)
+
+
+def _head_weight(cfg, params, mat):
+    if cfg.tie_embeddings:
+        emb = mat({"e": params["embed"]},
+                  {"e": ParamSpec(("fsdp", "tensor"), ("tensor", None))})["e"]
+        return emb.T
+    return mat({"h": params["lm_head"]}, {"h": wspec("fsdp", "tensor")})["h"]
+
+
+def loss(cfg: GriffinConfig, params, batch, mat: Materializer) -> jax.Array:
+    hidden = forward(cfg, params, batch, mat)
+    return softmax_xent_chunked(
+        hidden, _head_weight(cfg, params, mat), batch["labels"], batch.get("mask")
+    )
+
+
+# ---------------------------------------------------------------------------
+# serving — O(window) attention cache + O(1) recurrent state
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: GriffinConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    buf = min(max_len, cfg.window)
+    b, km1, r = batch, cfg.conv_kernel - 1, cfg.lru
+    n_rec_stacked = max(cfg.n_super * cfg.rec_per_super, 1)
+    state = dict(
+        rec=dict(
+            conv=jnp.zeros((cfg.n_super, cfg.rec_per_super, b, km1, r), jnp.float32),
+            h=jnp.zeros((cfg.n_super, cfg.rec_per_super, b, r), jnp.float32),
+        ),
+        att=dict(
+            k=jnp.zeros((cfg.n_super, b, buf, cfg.n_kv_heads, cfg.hd), dtype),
+            v=jnp.zeros((cfg.n_super, b, buf, cfg.n_kv_heads, cfg.hd), dtype),
+            pos=jnp.full((cfg.n_super, b, buf), -1, jnp.int32),
+        ),
+        length=jnp.zeros((), jnp.int32),
+    )
+    del n_rec_stacked
+    if cfg.n_extra_rec:
+        state["extra_rec"] = dict(
+            conv=jnp.zeros((cfg.n_extra_rec, b, km1, r), jnp.float32),
+            h=jnp.zeros((cfg.n_extra_rec, b, r), jnp.float32),
+        )
+    return state
+
+
+def state_shard_hint(state):
+    out = dict(state)
+    out["rec"] = dict(
+        conv=shard_hint(state["rec"]["conv"], None, None, "batch", None, "dstate"),
+        h=shard_hint(state["rec"]["h"], None, None, "batch", "dstate"),
+    )
+    out["att"] = dict(
+        k=shard_hint(state["att"]["k"], None, "batch", "kv_seq", None, None),
+        v=shard_hint(state["att"]["v"], None, "batch", "kv_seq", None, None),
+        pos=shard_hint(state["att"]["pos"], None, "batch", "kv_seq"),
+    )
+    if "extra_rec" in state:
+        out["extra_rec"] = dict(
+            conv=shard_hint(state["extra_rec"]["conv"], None, "batch", None, "dstate"),
+            h=shard_hint(state["extra_rec"]["h"], None, "batch", "dstate"),
+        )
+    return out
+
+
+def _run(cfg: GriffinConfig, params, state, tokens, mat, start_pos):
+    """Shared prefill/decode body: run `tokens` [B,S] from `start_pos`."""
+    b, s = tokens.shape
+    emb_w = mat({"embed": params["embed"]}, {"embed": param_specs(cfg)["embed"]})
+    x = shard_hint(jnp.take(emb_w["embed"], tokens, axis=0), "batch", None, None)
+    positions = start_pos + jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    new_state = dict(length=start_pos + s)
+    decode = s == 1
+
+    def rec_scan(x_, stack_p, stack_st):
+        def body(c, xs):
+            w_layer, st = xs
+            out, (conv_c, h_last) = rec_block(
+                cfg, mat(w_layer, _rec_specs()), c,
+                conv_carry=st["conv"], h0=st["h"],
+            )
+            return out, dict(conv=conv_c, h=h_last)
+
+        return jax.lax.scan(jax.checkpoint(body, prevent_cse=False), x_, (stack_p, stack_st))
+
+    rec_states, att_k, att_v, att_p = [], [], [], []
+    buf = state["att"]["k"].shape[2]
+    for g in range(cfg.n_super):
+        sub_p = jax.tree_util.tree_map(lambda a: a[g], params["super_blocks"])
+        sub_rst = jax.tree_util.tree_map(lambda a: a[g], state["rec"])
+        x, rst = rec_scan(x, sub_p["rec"], sub_rst)
+        rec_states.append(rst)
+        w_att = mat(sub_p["att"], _att_specs())
+        if decode:
+            cache_slice = (state["att"]["k"][g], state["att"]["v"][g], state["att"]["pos"][g])
+            x, (kc, vc, pc) = att_block(cfg, w_att, x, positions,
+                                        cache_slice=cache_slice, position=start_pos)
+        else:
+            x, (k_full, v_full, p_full) = att_block(cfg, w_att, x, positions)
+            t = min(buf, s)
+            kc, vc, pc = k_full[:, -t:], v_full[:, -t:], p_full[:, -t:]
+            if t < buf:
+                pad = buf - t
+                kc = jnp.pad(kc, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                vc = jnp.pad(vc, ((0, 0), (0, pad), (0, 0), (0, 0)))
+                pc = jnp.pad(pc, ((0, 0), (0, pad)), constant_values=-1)
+            elif s % buf:
+                roll = s % buf
+                kc, vc, pc = (jnp.roll(a, roll, axis=1) for a in (kc, vc, pc))
+        att_k.append(kc.astype(state["att"]["k"].dtype))
+        att_v.append(vc.astype(state["att"]["v"].dtype))
+        att_p.append(pc)
+    new_state["rec"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *rec_states)
+    new_state["att"] = dict(
+        k=jnp.stack(att_k), v=jnp.stack(att_v), pos=jnp.stack(att_p)
+    )
+    if cfg.n_extra_rec:
+        x, ex = rec_scan(x, params["extra_rec"], state["extra_rec"])
+        new_state["extra_rec"] = ex
+    x = rms_norm(x, mat.leaf(params["final_norm"]), cfg.norm_eps)
+    logits = x[:, -1:] @ _head_weight(cfg, params, mat)
+    return state_shard_hint(new_state), shard_hint(logits, "batch", None, "tensor")
+
+
+def prefill(cfg: GriffinConfig, params, batch, mat: Materializer, state):
+    return _run(cfg, params, state, batch["tokens"], mat, jnp.int32(0))
+
+
+def decode_step(cfg: GriffinConfig, params, state, tokens, mat: Materializer):
+    return _run(cfg, params, state, tokens, mat, state["length"])

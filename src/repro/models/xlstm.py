@@ -1,0 +1,621 @@
+"""xLSTM language model (sLSTM + mLSTM blocks) — xlstm-350m family.
+
+Structure follows arXiv:2405.04517: residual blocks where the sequence mixer
+is either an mLSTM (matrix-memory, no hidden-to-hidden recurrence — the
+parallelizable one) or an sLSTM (scalar-memory with true h_{t-1} feedback).
+Blocks have no separate FFN (d_ff = 0): the up/down projections inside each
+cell block carry the channel mixing.
+
+TPU adaptation (DESIGN.md §2/§4):
+  * mLSTM cell state C [B, H, dv, dk] is sharded over `dstate` (the value
+    dim) -> `model`.  The recurrence is elementwise in the sharded dims and
+    the readout contracts the *replicated* key dim, so the time scan issues
+    zero per-step collectives.
+  * sLSTM layers are small and have per-step h_{t-1} feedback; sharding the
+    head dim would psum every step (latency-bound), so sLSTM compute is
+    replicated over `model` and sharded over batch only.
+  * The time dimension runs under ``lax.scan`` (recurrent form — the paper's
+    own formulation).  A chunkwise-parallel mLSTM is a §Perf candidate.
+
+OMC applicability: all projection matrices (wq/wk/wv, up/down) are ordinary
+weight matrices and quantize; per-head gate biases and norm scales are
+excluded by the weights-only policy (paper §2.4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import (
+    Materializer,
+    ParamSpec,
+    RSPEC,
+    dense_init,
+    embed_init,
+    rms_norm,
+    scan_blocks,
+    shard_hint,
+    softmax_xent_chunked,
+    stack_layer_params,
+    wspec,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    n_layers: int
+    d_model: int
+    n_heads: int
+    vocab: int
+    slstm_every: int = 8  # 1-in-N blocks are sLSTM (xLSTM[7:1] ratio)
+    m_proj_factor: int = 2  # mLSTM inner width = factor * d_model
+    conv_kernel: int = 4
+    mlstm_impl: str = "chunked"  # "chunked" (default; ==recurrent, tested) | "recurrent"
+    mlstm_chunk: int = 64
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = True
+
+    @property
+    def d_inner(self) -> int:
+        return self.m_proj_factor * self.d_model
+
+    @property
+    def m_head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+    @property
+    def s_head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def n_super(self) -> int:
+        return self.n_layers // self.slstm_every
+
+    @property
+    def m_per_super(self) -> int:
+        return self.slstm_every - 1
+
+    @property
+    def n_extra_m(self) -> int:
+        return self.n_layers - self.n_super * self.slstm_every
+
+    def param_count(self) -> int:
+        d, di, h = self.d_model, self.d_inner, self.n_heads
+        m = d * 2 * di + self.conv_kernel * di + 3 * di * di + di * 2 * h + di * d + 2 * d + di
+        ds = d
+        s = d * 4 * ds + h * self.s_head_dim * 4 * self.s_head_dim + 4 * ds + ds * d + d + ds
+        n_m = self.n_layers - self.n_slstm
+        emb = self.vocab * d * (1 if self.tie_embeddings else 2)
+        return n_m * m + self.n_slstm * s + emb + d
+
+    @property
+    def n_slstm(self) -> int:
+        return self.n_super
+
+
+# ---------------------------------------------------------------------------
+# init / specs
+# ---------------------------------------------------------------------------
+
+
+def _mlstm_init(key, cfg: XLSTMConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 7)
+    d, di, h = cfg.d_model, cfg.d_inner, cfg.n_heads
+    return dict(
+        norm=jnp.ones((d,), jnp.float32),
+        w_up=dense_init(ks[0], d, 2 * di),
+        conv_w=(jax.random.normal(ks[1], (cfg.conv_kernel, di)) * 0.1).astype(jnp.float32),
+        wq=dense_init(ks[2], di, di),
+        wk=dense_init(ks[3], di, di),
+        wv=dense_init(ks[4], di, di),
+        w_if=dense_init(ks[5], di, 2 * h),  # i/f gate pre-activations per head
+        b_if=jnp.concatenate([jnp.zeros((h,)), jnp.ones((h,)) * 3.0]).astype(jnp.float32),
+        gn_scale=jnp.ones((di,), jnp.float32),
+        w_down=dense_init(ks[6], di, d),
+    )
+
+
+def _slstm_init(key, cfg: XLSTMConfig) -> Dict[str, Any]:
+    ks = jax.random.split(key, 3)
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.s_head_dim
+    return dict(
+        norm=jnp.ones((d,), jnp.float32),
+        w_gates=dense_init(ks[0], d, 4 * d),  # i, f, z, o stacked
+        r_gates=(jax.random.normal(ks[1], (h, dh, 4 * dh)) / np.sqrt(dh)).astype(jnp.float32),
+        b_gates=jnp.zeros((4 * d,), jnp.float32),
+        gn_scale=jnp.ones((d,), jnp.float32),
+        w_down=dense_init(ks[2], d, d),
+    )
+
+
+def _mlstm_specs() -> Dict[str, ParamSpec]:
+    return dict(
+        norm=RSPEC,
+        w_up=wspec("fsdp", "tensor"),
+        conv_w=ParamSpec(storage=(None, "tensor"), gathered=(None, "tensor")),
+        wq=wspec("fsdp", None),
+        wk=wspec("fsdp", None),
+        wv=wspec("fsdp", "dstate"),
+        w_if=wspec("fsdp", None),
+        b_if=RSPEC,
+        gn_scale=RSPEC,
+        w_down=wspec("dstate", "fsdp"),
+    )
+
+
+def _slstm_specs() -> Dict[str, ParamSpec]:
+    return dict(
+        norm=RSPEC,
+        w_gates=wspec("fsdp", None),
+        r_gates=ParamSpec(storage=(None, None, "fsdp"), gathered=(None, None, None)),
+        b_gates=RSPEC,
+        gn_scale=RSPEC,
+        w_down=wspec("fsdp", None),
+    )
+
+
+def block_specs(cfg: XLSTMConfig) -> Dict[str, Any]:
+    return dict(mlstm=_mlstm_specs(), slstm=_slstm_specs())
+
+
+def init(key, cfg: XLSTMConfig) -> Dict[str, Any]:
+    km, ks, ke, kx = jax.random.split(key, 4)
+    n_m_stacked = cfg.n_super * cfg.m_per_super
+    m_blocks = stack_layer_params(
+        [_mlstm_init(k, cfg) for k in jax.random.split(km, max(n_m_stacked, 1))]
+    )
+    # reshape to [n_super, m_per_super, ...]
+    m_blocks = jax.tree_util.tree_map(
+        lambda a: a.reshape((cfg.n_super, cfg.m_per_super) + a.shape[1:]), m_blocks
+    )
+    s_blocks = stack_layer_params(
+        [_slstm_init(k, cfg) for k in jax.random.split(ks, max(cfg.n_super, 1))]
+    )
+    params = dict(
+        embed=embed_init(ke, cfg.vocab, cfg.d_model),
+        super_blocks=dict(mlstm=m_blocks, slstm=s_blocks),
+        final_norm=jnp.ones((cfg.d_model,), jnp.float32),
+    )
+    if cfg.n_extra_m:
+        params["extra_m"] = stack_layer_params(
+            [_mlstm_init(k, cfg) for k in jax.random.split(kx, cfg.n_extra_m)]
+        )
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ke, cfg.d_model, cfg.vocab)
+    return params
+
+
+def param_specs(cfg: XLSTMConfig) -> Dict[str, Any]:
+    specs = dict(
+        embed=ParamSpec(storage=("fsdp", "tensor"), gathered=(None, "tensor")),
+        super_blocks=dict(mlstm=_mlstm_specs(), slstm=_slstm_specs()),
+        final_norm=RSPEC,
+    )
+    if cfg.n_extra_m:
+        specs["extra_m"] = _mlstm_specs()
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = wspec("fsdp", "tensor")
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# cells
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv(x: jax.Array, conv_w: jax.Array, carry: Optional[jax.Array] = None):
+    """Depthwise causal conv along seq.  x [B, S, C]; conv_w [K, C].
+
+    With `carry` [B, K-1, C] (decode ring) uses it as left context and
+    returns (y, new_carry).
+    """
+    k = conv_w.shape[0]
+    if carry is None:
+        xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([carry.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * conv_w[i] for i in range(k))
+    new_carry = xp[:, -(k - 1):] if k > 1 else None
+    return y, new_carry
+
+
+def _mlstm_scan(q, k, v, i_pre, f_pre, state):
+    """Run the mLSTM recurrence over time.
+
+    q/k [B,S,H,dk], v [B,S,H,dv], i_pre/f_pre [B,S,H].
+    state (C [B,H,dv,dk], n [B,H,dk], m [B,H]) or None.
+    Returns h [B,S,H,dv], new state.
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    if state is None:
+        state = (
+            jnp.zeros((b, h, dv, dk), jnp.float32),
+            jnp.zeros((b, h, dk), jnp.float32),
+            jnp.full((b, h), -1e30, jnp.float32),
+        )
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, it, ft = xs  # [B,H,dk],[B,H,dk],[B,H,dv],[B,H],[B,H]
+        f_log = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(f_log + m, it)
+        i_sc = jnp.exp(it - m_new)
+        f_sc = jnp.exp(f_log + m - m_new)
+        C = f_sc[..., None, None] * C + i_sc[..., None, None] * (
+            vt[..., :, None] * kt[..., None, :]
+        )
+        n = f_sc[..., None] * n + i_sc[..., None] * kt
+        num = jnp.einsum("bhvk,bhk->bhv", C, qt)
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", n, qt))
+        ht = num / jnp.maximum(den, 1.0)[..., None]
+        return (C, n, m_new), ht
+
+    xs = (
+        q.transpose(1, 0, 2, 3),
+        k.transpose(1, 0, 2, 3),
+        v.transpose(1, 0, 2, 3),
+        i_pre.transpose(1, 0, 2),
+        f_pre.transpose(1, 0, 2),
+    )
+    state, hs = jax.lax.scan(step, state, xs)
+    return hs.transpose(1, 0, 2, 3), state  # [B,S,H,dv]
+
+
+def _mlstm_chunked(q, k, v, i_pre, f_pre, state, chunk: int = 64):
+    """Chunkwise-parallel mLSTM — same math as :func:`_mlstm_scan`.
+
+    §Perf hillclimb (EXPERIMENTS.md): the recurrent form reads+writes the
+    matrix state C [B,H,dv,dk] every timestep — at xlstm-350m/train_4k that
+    is ~67 MB x 2 x 4096 steps x 21 layers of HBM traffic (the worst
+    roofline cell in the baseline table).  The chunkwise form materializes
+    C once per *chunk*: within a chunk the contributions are computed in
+    parallel, attention-style, with exact exponential-gating stabilizers:
+
+      F_i   = Σ_{l<=i} logsigmoid(f_l)           (cumulative log-decay)
+      D_ij  = F_i - F_j + ĩ_j   (j <= i)         (intra-chunk log-weights)
+      m_i   = max(m_prev + F_i, max_j D_ij)      == the sequential m_t
+      h_i   = [exp(m_prev+F_i-m_i)·q_i C_prev + Σ_j exp(D_ij-m_i)(q_i·k_j)v_j]
+              / max(|n_i·q_i-analogue|, 1)
+
+    The stabilizer recursion m_t = max(m_{t-1}+logσ(f_t), ĩ_t) unrolls to
+    exactly this max, so chunked == sequential up to fp reassociation
+    (tested).  State HBM traffic drops by the chunk length; the added
+    intra-chunk work is MXU-friendly matmuls.
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    if state is None:
+        state = (
+            jnp.zeros((b, h, dv, dk), jnp.float32),
+            jnp.zeros((b, h, dk), jnp.float32),
+            jnp.full((b, h), -1e30, jnp.float32),
+        )
+    c = min(chunk, s)
+    while s % c:
+        c -= 1
+    n_chunks = s // c
+
+    def to_chunks(x, nfeat):
+        x = x.reshape((b, n_chunks, c, h) + x.shape[3:])
+        perm = (1, 0, 3, 2) + tuple(range(4, 4 + nfeat))
+        return x.transpose(perm)  # [n_chunks, B, H, C, ...]
+
+    qs = shard_hint(to_chunks(q.astype(jnp.float32), 1),
+                    None, "batch", None, None, None)
+    ks = shard_hint(to_chunks(k.astype(jnp.float32), 1),
+                    None, "batch", None, None, None)
+    vs = shard_hint(to_chunks(v.astype(jnp.float32), 1),
+                    None, "batch", None, None, "dstate")
+    is_ = shard_hint(to_chunks(i_pre.astype(jnp.float32), 0),
+                     None, "batch", None, None)
+    fs = shard_hint(to_chunks(f_pre.astype(jnp.float32), 0),
+                    None, "batch", None, None)
+    tri = jnp.tril(jnp.ones((c, c), bool))
+
+    def one_chunk(carry, xs):
+        C_prev, n_prev, m_prev = carry
+        qc, kc, vc, ic, fc = xs  # [B,H,C,dk],[B,H,C,dk],[B,H,C,dv],[B,H,C]x2
+        f_log = jax.nn.log_sigmoid(fc)
+        F = jnp.cumsum(f_log, axis=-1)  # F_i (inclusive)
+        D = F[..., :, None] - F[..., None, :] + ic[..., None, :]
+        D = jnp.where(tri, D, -jnp.inf)
+        b_i = m_prev[..., None] + F
+        m_i = jnp.maximum(b_i, jnp.max(D, axis=-1))
+        w_inter = jnp.exp(b_i - m_i)  # [B,H,C]
+        w_intra = jnp.exp(D - m_i[..., None])  # [B,H,C,C]
+        scores = jnp.einsum("bhid,bhjd->bhij", qc, kc)
+        p = w_intra * scores
+        h_intra = jnp.einsum("bhij,bhjv->bhiv", p, vc)
+        h_inter = w_inter[..., None] * jnp.einsum("bhvk,bhik->bhiv", C_prev, qc)
+        n_intra = jnp.sum(p, axis=-1)
+        n_inter = w_inter * jnp.einsum("bhk,bhik->bhi", n_prev, qc)
+        den = jnp.abs(n_inter + n_intra)
+        hv = (h_inter + h_intra) / jnp.maximum(den, 1.0)[..., None]
+        # chunk-boundary state: contribution of step j decays by F_C - F_j
+        F_C = F[..., -1]
+        g = F_C[..., None] - F + ic  # [B,H,C]
+        m_next = jnp.maximum(m_prev + F_C, jnp.max(g, axis=-1))
+        wj = jnp.exp(g - m_next[..., None])
+        decay = jnp.exp(m_prev + F_C - m_next)
+        C_next = (decay[..., None, None] * C_prev
+                  + jnp.einsum("bhj,bhjv,bhjk->bhvk", wj, vc, kc))
+        n_next = decay[..., None] * n_prev + jnp.einsum("bhj,bhjk->bhk", wj, kc)
+        return (C_next, n_next, m_next), hv
+
+    # remat per chunk: backward recomputes the intra-chunk tiles instead of
+    # stacking [n_chunks, B, H, C, C] weight tensors in HBM
+    one_chunk = jax.checkpoint(one_chunk, prevent_cse=False)
+    state, hs = jax.lax.scan(one_chunk, state, (qs, ks, vs, is_, fs))
+    hs = hs.transpose(1, 0, 3, 2, 4).reshape(b, s, h, dv)
+    return hs, state
+
+
+def _group_norm_heads(x: jax.Array, scale: jax.Array, eps: float):
+    """Per-head group norm.  x [B, S, H, dh]; scale [H*dh]."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    xn = (x - mu) * jax.lax.rsqrt(var + eps)
+    b, s, h, dh = x.shape
+    return xn.reshape(b, s, h * dh) * scale
+
+
+def mlstm_block(cfg: XLSTMConfig, w, x, conv_carry=None, cell_state=None):
+    """x [B,S,D] -> (x', (conv_carry', cell_state')).  Decode-compatible."""
+    b, s, d = x.shape
+    h_heads, dh = cfg.n_heads, cfg.m_head_dim
+    hin = rms_norm(x, w["norm"], cfg.norm_eps)
+    up = hin @ w["w_up"]
+    up = shard_hint(up, "batch", None, "tensor")
+    main, z = jnp.split(up, 2, axis=-1)  # [B,S,Di] each
+    main_c, conv_carry = _causal_conv(main, w["conv_w"], conv_carry)
+    main_c = jax.nn.silu(main_c)
+    q = (main_c @ w["wq"]).reshape(b, s, h_heads, dh)
+    k = (main_c @ w["wk"]).reshape(b, s, h_heads, dh) / np.sqrt(dh)
+    v = shard_hint(main @ w["wv"], "batch", None, "dstate").reshape(b, s, h_heads, dh)
+    if_pre = main_c @ w["w_if"] + w["b_if"]  # [B,S,2H]
+    i_pre, f_pre = jnp.split(if_pre, 2, axis=-1)
+    if cfg.mlstm_impl == "chunked" and s > 1:
+        hs, cell_state = _mlstm_chunked(q, k, v, i_pre, f_pre, cell_state,
+                                        chunk=cfg.mlstm_chunk)
+    else:
+        hs, cell_state = _mlstm_scan(q, k, v, i_pre, f_pre, cell_state)
+    hs = _group_norm_heads(hs, w["gn_scale"], cfg.norm_eps)
+    hs = hs * jax.nn.silu(z)
+    out = hs @ w["w_down"]
+    return (x + shard_hint(out, "batch", None, None)).astype(x.dtype), (
+        conv_carry, cell_state)
+
+
+def slstm_block(cfg: XLSTMConfig, w, x, state=None):
+    """x [B,S,D] -> (x', state').  True recurrence (h_{t-1} feedback)."""
+    b, s, d = x.shape
+    h_heads, dh = cfg.n_heads, cfg.s_head_dim
+    hin = rms_norm(x, w["norm"], cfg.norm_eps)
+    gates_x = hin @ w["w_gates"] + w["b_gates"]  # [B,S,4D]
+    gates_x = gates_x.reshape(b, s, 4, h_heads, dh)
+    if state is None:
+        state = (
+            jnp.zeros((b, h_heads, dh), jnp.float32),  # c
+            jnp.zeros((b, h_heads, dh), jnp.float32),  # n
+            jnp.full((b, h_heads, dh), -1e30, jnp.float32),  # m
+            jnp.zeros((b, h_heads, dh), jnp.float32),  # h
+        )
+
+    def step(carry, gx):
+        c, n, m, h_prev = carry  # each [B, H, dh]; gx [B, 4, H, dh]
+        # recurrent contribution, block-diagonal per head
+        gr = jnp.einsum("bhd,hde->bhe", h_prev, w["r_gates"])
+        gr = gr.reshape(b, h_heads, 4, dh).transpose(0, 2, 1, 3)  # [B,4,H,dh]
+        g = gx + gr
+        gi, gf, gz, go = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+        f_log = jax.nn.log_sigmoid(gf)
+        m_new = jnp.maximum(f_log + m, gi)
+        i_sc = jnp.exp(gi - m_new)
+        f_sc = jnp.exp(f_log + m - m_new)
+        c = f_sc * c + i_sc * jnp.tanh(gz)
+        n = f_sc * n + i_sc
+        h_new = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1.0)
+        return (c, n, m_new, h_new), h_new
+
+    state, hs = jax.lax.scan(step, state, gates_x.transpose(1, 0, 2, 3, 4))
+    hs = hs.transpose(1, 0, 2, 3)  # [B,S,H,dh]
+    hs = _group_norm_heads(hs, w["gn_scale"], cfg.norm_eps)
+    out = hs @ w["w_down"]
+    return (x + shard_hint(out, "batch", None, None)).astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# forward / loss
+# ---------------------------------------------------------------------------
+
+
+def forward(cfg: XLSTMConfig, params, batch, mat: Materializer):
+    tokens = batch["tokens"]
+    emb_w = mat({"embed": params["embed"]}, {"embed": param_specs(cfg)["embed"]})
+    x = jnp.take(emb_w["embed"], tokens, axis=0)
+    x = shard_hint(x, "batch", None, None)
+
+    def super_body(carry, super_params, _):
+        x_ = carry
+        m_stack, s_params = super_params["mlstm"], super_params["slstm"]
+
+        def m_body(c, w_layer):
+            w = mat(w_layer, _mlstm_specs())
+            out, _ = mlstm_block(cfg, w, c)
+            return out, None
+
+        x_, _ = jax.lax.scan(jax.checkpoint(m_body, prevent_cse=False), x_, m_stack)
+        x_, _ = slstm_block(cfg, mat(s_params, _slstm_specs()), x_)
+        return x_
+
+    x = scan_blocks(
+        super_body, params["super_blocks"], x, lambda t, s=None: t, None
+    )
+    if cfg.n_extra_m:
+        def m_body(c, w_layer):
+            w = mat(w_layer, _mlstm_specs())
+            out, _ = mlstm_block(cfg, w, c)
+            return out, None
+
+        x, _ = jax.lax.scan(jax.checkpoint(m_body, prevent_cse=False), x, params["extra_m"])
+    return rms_norm(x, mat.leaf(params["final_norm"]), cfg.norm_eps)
+
+
+def _head_weight(cfg, params, mat):
+    if cfg.tie_embeddings:
+        emb = mat({"e": params["embed"]},
+                  {"e": ParamSpec(("fsdp", "tensor"), ("tensor", None))})["e"]
+        return emb.T
+    return mat({"h": params["lm_head"]}, {"h": wspec("fsdp", "tensor")})["h"]
+
+
+def loss(cfg: XLSTMConfig, params, batch, mat: Materializer) -> jax.Array:
+    hidden = forward(cfg, params, batch, mat)
+    return softmax_xent_chunked(
+        hidden, _head_weight(cfg, params, mat), batch["labels"], batch.get("mask")
+    )
+
+
+# ---------------------------------------------------------------------------
+# serving — constant-size recurrent state
+# ---------------------------------------------------------------------------
+
+
+def init_decode_state(cfg: XLSTMConfig, batch: int, max_len: int, dtype=jnp.float32):
+    """State pytree; max_len is irrelevant (O(1) state) — kept for API parity."""
+    del max_len
+    b, h = batch, cfg.n_heads
+    dk = dv = cfg.m_head_dim
+    km1 = cfg.conv_kernel - 1
+    n_m_stacked = cfg.n_super * cfg.m_per_super
+
+    def m_state(n):
+        return dict(
+            conv=jnp.zeros((n, b, km1, cfg.d_inner), jnp.float32),
+            C=jnp.zeros((n, b, h, dv, dk), jnp.float32),
+            n=jnp.zeros((n, b, h, dk), jnp.float32),
+            m=jnp.full((n, b, h), -1e30, jnp.float32),
+        )
+
+    state = dict(
+        mlstm=jax.tree_util.tree_map(
+            lambda a: a.reshape((cfg.n_super, cfg.m_per_super) + a.shape[1:]),
+            m_state(max(n_m_stacked, 1)),
+        ),
+        slstm=dict(
+            c=jnp.zeros((cfg.n_super, b, h, cfg.s_head_dim), jnp.float32),
+            n=jnp.zeros((cfg.n_super, b, h, cfg.s_head_dim), jnp.float32),
+            m=jnp.full((cfg.n_super, b, h, cfg.s_head_dim), -1e30, jnp.float32),
+            h=jnp.zeros((cfg.n_super, b, h, cfg.s_head_dim), jnp.float32),
+        ),
+        length=jnp.zeros((), jnp.int32),
+    )
+    if cfg.n_extra_m:
+        state["extra_m"] = m_state(cfg.n_extra_m)
+    return state
+
+
+def state_shard_hint(state):
+    f = lambda a, *ax: shard_hint(a, *ax)
+    out = dict(state)
+    out["mlstm"] = dict(
+        conv=f(state["mlstm"]["conv"], None, None, "batch", None, "dstate"),
+        C=f(state["mlstm"]["C"], None, None, "batch", None, "dstate", None),
+        n=f(state["mlstm"]["n"], None, None, "batch", None, None),
+        m=f(state["mlstm"]["m"], None, None, "batch", None),
+    )
+    if "extra_m" in state:
+        out["extra_m"] = dict(
+            conv=f(state["extra_m"]["conv"], None, "batch", None, "dstate"),
+            C=f(state["extra_m"]["C"], None, "batch", None, "dstate", None),
+            n=f(state["extra_m"]["n"], None, "batch", None, None),
+            m=f(state["extra_m"]["m"], None, "batch", None),
+        )
+    return out
+
+
+def _decode_mlstm_group(cfg, mat, stack_params, stack_state, x):
+    """scan one group of stacked mLSTM layers for a single token."""
+
+    def body(carry, xs):
+        x_ = carry
+        w_layer, st = xs
+        w = mat(w_layer, _mlstm_specs())
+        out, (conv_c, (C, n, m)) = mlstm_block(
+            cfg, w, x_, conv_carry=st["conv"], cell_state=(st["C"], st["n"], st["m"])
+        )
+        return out, dict(conv=conv_c, C=C, n=n, m=m)
+
+    x, new_state = jax.lax.scan(body, x, (stack_params, stack_state))
+    return x, new_state
+
+
+def prefill(cfg: XLSTMConfig, params, batch, mat: Materializer, state):
+    """Process the prompt sequentially, returning (state, last-token logits)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    emb_w = mat({"embed": params["embed"]}, {"embed": param_specs(cfg)["embed"]})
+    x = shard_hint(jnp.take(emb_w["embed"], tokens, axis=0), "batch", None, None)
+
+    new_state = {"length": jnp.asarray(s, jnp.int32)}
+    m_states, s_states = [], []
+    for g in range(cfg.n_super):
+        sub_p = jax.tree_util.tree_map(lambda a: a[g], params["super_blocks"])
+        sub_m_st = jax.tree_util.tree_map(lambda a: a[g], state["mlstm"])
+
+        def m_body(carry, xs):
+            x_, = carry
+            w_layer, st = xs
+            w = mat(w_layer, _mlstm_specs())
+            out, (conv_c, (C, n, m)) = mlstm_block(
+                cfg, w, x_, conv_carry=st["conv"],
+                cell_state=(st["C"], st["n"], st["m"]),
+            )
+            return (out,), dict(conv=conv_c, C=C, n=n, m=m)
+
+        (x,), m_st = jax.lax.scan(
+            jax.checkpoint(m_body, prevent_cse=False), (x,), (sub_p["mlstm"], sub_m_st)
+        )
+        m_states.append(m_st)
+        x, s_st = slstm_block(
+            cfg, mat(sub_p["slstm"], _slstm_specs()), x,
+            state=tuple(state["slstm"][k][g] for k in ("c", "n", "m", "h")),
+        )
+        s_states.append(s_st)
+    new_state["mlstm"] = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *m_states)
+    new_state["slstm"] = dict(
+        zip(("c", "n", "m", "h"), (jnp.stack([st[i] for st in s_states]) for i in range(4)))
+    )
+    if cfg.n_extra_m:
+        def m_body2(carry, xs):
+            x_, = carry
+            w_layer, st = xs
+            w = mat(w_layer, _mlstm_specs())
+            out, (conv_c, (C, n, m)) = mlstm_block(
+                cfg, w, x_, conv_carry=st["conv"],
+                cell_state=(st["C"], st["n"], st["m"]),
+            )
+            return (out,), dict(conv=conv_c, C=C, n=n, m=m)
+
+        (x,), ex_st = jax.lax.scan(
+            jax.checkpoint(m_body2, prevent_cse=False), (x,),
+            (params["extra_m"], state["extra_m"]),
+        )
+        new_state["extra_m"] = ex_st
+    x = rms_norm(x, mat.leaf(params["final_norm"]), cfg.norm_eps)
+    logits = x[:, -1:] @ _head_weight(cfg, params, mat)
+    return state_shard_hint(new_state), shard_hint(logits, "batch", None, "tensor")
+
+
+def decode_step(cfg: XLSTMConfig, params, state, tokens, mat: Materializer):
+    """One token [B,1] through the recurrence -> (state', logits)."""
+    batch = dict(tokens=tokens)
+    new_state, logits = prefill(cfg, params, batch, mat, state)
+    new_state["length"] = state["length"] + 1
+    return new_state, logits

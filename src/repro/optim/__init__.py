@@ -1,0 +1,23 @@
+"""Pure-JAX optimizers (optax is not available offline).
+
+Client optimizers (paper: plain SGD, 1 local step) and server optimizers
+(FedAvg = server-side SGD on the aggregated delta, optionally with momentum;
+FedAdam/FedAdagrad for the adaptive variants from Reddi et al.).
+"""
+
+from .optimizers import (
+    Optimizer,
+    adamw,
+    fedadagrad,
+    fedadam,
+    fedavg,
+    momentum,
+    sgd,
+)
+from .schedules import constant, cosine_decay, warmup_cosine
+
+__all__ = [
+    "Optimizer", "sgd", "momentum", "adamw",
+    "fedavg", "fedadam", "fedadagrad",
+    "constant", "cosine_decay", "warmup_cosine",
+]

@@ -1,0 +1,141 @@
+"""Optimizers as (init, update) pairs over pytrees.
+
+``update(grads, state, params) -> (updates, new_state)`` returns *additive*
+updates (apply as ``params + updates``), matching the optax convention so the
+federated server can treat the aggregated client delta as a "gradient"
+(sign-flipped) for the server optimizer — the FedOpt framework.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Union[float, Callable[[jax.Array], jax.Array]]
+
+
+def _lr_at(lr: Schedule, step) -> jax.Array:
+    return jnp.asarray(lr(step) if callable(lr) else lr, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], Any]  # (grads, state, params) -> (upd, st)
+
+
+class _CountState(NamedTuple):
+    count: jax.Array
+
+
+def sgd(lr: Schedule) -> Optimizer:
+    def init(params):
+        return _CountState(jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params=None):
+        s = _lr_at(lr, state.count)
+        upd = jax.tree_util.tree_map(lambda g: -s * g, grads)
+        return upd, _CountState(state.count + 1)
+
+    return Optimizer(init, update)
+
+
+class _MomentumState(NamedTuple):
+    count: jax.Array
+    mu: Any
+
+
+def momentum(lr: Schedule, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return _MomentumState(
+            jnp.zeros((), jnp.int32),
+            jax.tree_util.tree_map(jnp.zeros_like, params),
+        )
+
+    def update(grads, state, params=None):
+        s = _lr_at(lr, state.count)
+        mu = jax.tree_util.tree_map(lambda m, g: beta * m + g, state.mu, grads)
+        if nesterov:
+            upd = jax.tree_util.tree_map(lambda m, g: -s * (beta * m + g), mu, grads)
+        else:
+            upd = jax.tree_util.tree_map(lambda m: -s * m, mu)
+        return upd, _MomentumState(state.count + 1, mu)
+
+    return Optimizer(init, update)
+
+
+class _AdamState(NamedTuple):
+    count: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adamw(lr: Schedule, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = jax.tree_util.tree_map(jnp.zeros_like, params)
+        return _AdamState(jnp.zeros((), jnp.int32), z,
+                          jax.tree_util.tree_map(jnp.zeros_like, params))
+
+    def update(grads, state, params=None):
+        c = state.count + 1
+        s = _lr_at(lr, state.count)
+        mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda n, g: b2 * n + (1 - b2) * jnp.square(g), state.nu, grads
+        )
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def u(m, n, p):
+            upd = -s * (m / bc1) / (jnp.sqrt(n / bc2) + eps)
+            if weight_decay and p is not None:
+                upd = upd - s * weight_decay * p
+            return upd
+
+        if params is None:
+            upd = jax.tree_util.tree_map(lambda m, n: u(m, n, None), mu, nu)
+        else:
+            upd = jax.tree_util.tree_map(u, mu, nu, params)
+        return upd, _AdamState(c, mu, nu)
+
+    return Optimizer(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Server optimizers (FedOpt family) — consume the *negated mean client delta*
+# as the gradient: grads = -mean_delta.
+# ---------------------------------------------------------------------------
+
+
+def fedavg(server_lr: Schedule = 1.0, server_momentum: float = 0.0) -> Optimizer:
+    """FedAvg: params += server_lr * mean_delta (optionally with momentum)."""
+    return momentum(server_lr, server_momentum) if server_momentum else sgd(server_lr)
+
+
+def fedadam(server_lr: Schedule = 1e-2, b1: float = 0.9, b2: float = 0.99,
+            eps: float = 1e-3) -> Optimizer:
+    return adamw(server_lr, b1, b2, eps)
+
+
+def fedadagrad(server_lr: Schedule = 1e-2, eps: float = 1e-3) -> Optimizer:
+    class _State(NamedTuple):
+        count: jax.Array
+        nu: Any
+
+    def init(params):
+        return _State(jnp.zeros((), jnp.int32),
+                      jax.tree_util.tree_map(jnp.zeros_like, params))
+
+    def update(grads, state, params=None):
+        s = _lr_at(server_lr, state.count)
+        nu = jax.tree_util.tree_map(lambda n, g: n + jnp.square(g), state.nu, grads)
+        upd = jax.tree_util.tree_map(
+            lambda g, n: -s * g / (jnp.sqrt(n) + eps), grads, nu
+        )
+        return upd, _State(state.count + 1, nu)
+
+    return Optimizer(init, update)

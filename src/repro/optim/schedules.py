@@ -1,0 +1,30 @@
+"""Learning-rate schedules as step -> lr callables."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def cosine_decay(lr: float, total_steps: int, final_frac: float = 0.0):
+    def f(step):
+        t = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+        c = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.float32(lr) * (final_frac + (1 - final_frac) * c)
+
+    return f
+
+
+def warmup_cosine(lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.0):
+    cd = cosine_decay(lr, max(total_steps - warmup_steps, 1), final_frac)
+
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.float32(lr) * s / max(warmup_steps, 1)
+        return jnp.where(step < warmup_steps, warm, cd(step - warmup_steps))
+
+    return f

@@ -1,0 +1,8 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+
+from .analysis import (
+    RooflineTerms,
+    analyze_compiled,
+    collective_bytes,
+    model_flops,
+)

@@ -1,0 +1,226 @@
+"""Three-term roofline from the compiled dry-run (no real hardware).
+
+  compute    = HLO_FLOPs   / (chips x peak_FLOP/s)
+  memory     = HLO_bytes   / (chips x HBM_bw)
+  collective = wire_bytes  / (chips x link_bw)
+
+FLOPs / bytes come from ``compiled.cost_analysis()``.  Collective bytes are
+NOT in cost_analysis: we parse the post-SPMD optimized HLO text and sum the
+wire traffic of every all-gather / all-reduce / reduce-scatter / all-to-all
+/ collective-permute, using a ring-model byte count per participating
+device:
+
+  all-gather        (n-1)/n x output_bytes          ~= output_bytes
+  reduce-scatter    (n-1)/n x input_bytes
+  all-reduce        2 (n-1)/n x bytes               (RS + AG phases)
+  all-to-all        (n-1)/n x bytes
+  collective-permute  bytes (point-to-point)
+
+Shapes in the optimized HLO are already *per-device* (post-partitioning), so
+the sums are per-device wire bytes — exactly the numerator the collective
+term needs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0,
+}
+
+# e.g. "u16[80,512,128]{2,1,0}" or "f32[]"; tuple types handled separately
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}]+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute|"
+    r"all-gather-start|all-reduce-start|collective-permute-start)\b",
+    re.MULTILINE,
+)
+
+_REPLICA_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_REPLICA_GROUPS_IOTA_RE = re.compile(r"\[(\d+),(\d+)\]<=\[")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _REPLICA_GROUPS_IOTA_RE.search(line)
+    if m:
+        # iota format [groups, group_size]<=[...]
+        return int(m.group(2))
+    m = _REPLICA_GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2  # unknown -> conservative small group
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device wire bytes by collective kind (ring model)."""
+    out: Dict[str, float] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, op = m.group(1), m.group(2)
+        op = op.replace("-start", "")
+        line = hlo_text[m.start(): hlo_text.find("\n", m.start())]
+        n = max(_group_size(line), 1)
+        ring = (n - 1) / n
+        size = _shape_bytes(shape_str)
+        if op == "all-gather":
+            wire = ring * size  # output is the gathered (per-device) result
+        elif op == "reduce-scatter":
+            wire = ring * size * n  # output is the scattered shard
+        elif op == "all-reduce":
+            wire = 2 * ring * size
+        elif op == "all-to-all":
+            wire = ring * size
+        else:  # collective-permute
+            wire = size
+        out[op] = out.get(op, 0.0) + wire
+        out["total"] = out.get("total", 0.0) + wire
+    return out
+
+
+def collective_counts(hlo_text: str) -> Dict[str, int]:
+    counts: Dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        op = m.group(2).replace("-start", "")
+        counts[op] = counts.get(op, 0) + 1
+    return counts
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops: float
+    hlo_bytes: float
+    wire_bytes: float
+    per_collective: Dict[str, float]
+    collective_ops: Dict[str, int]
+    model_flops: float = 0.0
+    top_collectives: list = dataclasses.field(default_factory=list)
+    top_bytes: list = dataclasses.field(default_factory=list)
+    xla_cost_analysis_flops: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = dict(compute=self.compute_s, memory=self.memory_s,
+                     collective=self.collective_s)
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """No-overlap estimate: sum of terms (upper bound)."""
+        return self.compute_s + self.memory_s + self.collective_s
+
+    @property
+    def step_time_overlap_s(self) -> float:
+        """Perfect-overlap estimate: max of terms (lower bound)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — remat/redundancy waste detector."""
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilization at the overlap-optimistic step time."""
+        if self.step_time_overlap_s == 0:
+            return 0.0
+        return (self.model_flops and
+                (self.model_flops / self.hlo_flops) * self.compute_s
+                / self.step_time_overlap_s) or 0.0
+
+    def to_dict(self):
+        d = dataclasses.asdict(self)
+        d.update(dominant=self.dominant, step_time_s=self.step_time_s,
+                 step_time_overlap_s=self.step_time_overlap_s,
+                 useful_flops_ratio=self.useful_flops_ratio)
+        return d
+
+
+def analyze_compiled(
+    compiled,
+    n_chips: int,
+    *,
+    peak_flops: float = 197e12,
+    hbm_bw: float = 819e9,
+    link_bw: float = 50e9,
+    model_flops_total: float = 0.0,
+    hlo_text: Optional[str] = None,
+) -> RooflineTerms:
+    """Derive the three roofline terms from a compiled executable.
+
+    Costs come from the structured HLO model (repro.roofline.hlo_cost) which
+    multiplies while-loop bodies by their trip counts — XLA's own
+    cost_analysis counts scan bodies once and under-reports a layer-scanned
+    model by ~L x (kept in the output as ``xla_cost_analysis`` for
+    cross-checking).  All HLO-model numbers are per-device-per-step
+    (post-SPMD shapes), so the per-chip roofline terms divide by nothing.
+    """
+    from .hlo_cost import HloCostModel
+
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    model = HloCostModel(text)
+    cost = model.cost()
+    counts = collective_counts(text)
+    wire = cost.coll.get("total", 0.0)
+    xla_flops = 0.0
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        xla_flops = float(ca.get("flops", 0.0))
+    except Exception:
+        pass
+    terms = RooflineTerms(
+        compute_s=cost.flops / peak_flops,
+        memory_s=cost.bytes / hbm_bw,
+        collective_s=wire / link_bw,
+        hlo_flops=cost.flops * n_chips,  # whole-program, for MODEL_FLOPS ratio
+        hlo_bytes=cost.bytes * n_chips,
+        wire_bytes=wire,
+        per_collective={k: v for k, v in cost.coll.items()},
+        collective_ops=counts,
+        model_flops=model_flops_total,
+    )
+    terms.top_collectives = model.top_collectives()
+    terms.top_bytes = model.top_bytes()
+    terms.xla_cost_analysis_flops = xla_flops
+    return terms
+
+
+def model_flops(arch_mod, cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N·D for training, 2·N·D for inference (N = active)."""
+    n = (cfg.active_param_count() if hasattr(cfg, "active_param_count")
+         else cfg.param_count())
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch

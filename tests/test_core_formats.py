@@ -1,0 +1,176 @@
+"""Unit + property tests for the OMC minifloat codec and bit packing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.formats import FP32, FloatFormat, decode, encode, qdq_ste, value_quantize
+from repro.core.packing import pack, packed_bytes, packed_words, unpack
+
+FORMATS = [
+    FloatFormat.parse(s)
+    for s in ["S1E2M3", "S1E3M7", "S1E4M8", "S1E5M7", "S1E3M9", "S1E4M14", "S1E5M10", "S1E8M7", "S1E8M23"]
+]
+
+
+def _rand(n=4096, seed=0, scale=4.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(n,)).astype(np.float32) * scale)
+
+
+@pytest.mark.parametrize("fmt", FORMATS, ids=lambda f: f.name)
+def test_codec_roundtrip_exact(fmt):
+    """decode(encode(x)) must equal the reduce_precision value oracle."""
+    x = _rand()
+    vq = value_quantize(x, fmt)
+    back = decode(encode(x, fmt), fmt)
+    np.testing.assert_array_equal(np.asarray(vq), np.asarray(back))
+
+
+@pytest.mark.parametrize("fmt", FORMATS, ids=lambda f: f.name)
+def test_codec_idempotent(fmt):
+    x = _rand(seed=1)
+    once = value_quantize(x, fmt)
+    twice = value_quantize(once, fmt)
+    np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+
+
+def test_fp16_and_bf16_equivalence():
+    x = _rand(seed=2, scale=100.0)
+    f16 = np.asarray(x).astype(np.float16).astype(np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(value_quantize(x, FloatFormat(5, 10))), f16
+    )
+    bf16 = np.asarray(x).astype(jnp.bfloat16).astype(np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(value_quantize(x, FloatFormat(8, 7))), bf16
+    )
+
+
+def test_identity_format_is_lossless():
+    x = _rand(seed=3, scale=1e20)
+    np.testing.assert_array_equal(np.asarray(value_quantize(x, FP32)), np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(decode(encode(x, FP32), FP32)), np.asarray(x))
+
+
+def test_saturation_not_inf():
+    fmt = FloatFormat(5, 10)
+    x = jnp.asarray([1e9, -1e9, np.inf, -np.inf], jnp.float32)
+    vq = np.asarray(value_quantize(x, fmt))
+    assert np.all(np.isfinite(vq))
+    np.testing.assert_array_equal(vq, [65504.0, -65504.0, 65504.0, -65504.0])
+
+
+def test_nan_propagates():
+    fmt = FloatFormat(4, 3)
+    x = jnp.asarray([np.nan, 1.0], jnp.float32)
+    vq = np.asarray(decode(encode(x, fmt), fmt))
+    assert np.isnan(vq[0]) and vq[1] == 1.0
+
+
+def test_subnormals_supported():
+    fmt = FloatFormat(5, 10)  # min normal 2^-14, subnormal step 2^-24
+    x = jnp.asarray(
+        [2.0**-15, -(2.0**-15), 2.0**-24, 2.0**-26, -(2.0**-26), 2.0**-14],
+        jnp.float32,
+    )
+    vq = np.asarray(value_quantize(x, fmt))
+    np.testing.assert_array_equal(
+        vq, [2.0**-15, -(2.0**-15), 2.0**-24, 0.0, -0.0, 2.0**-14]
+    )
+    back = np.asarray(decode(encode(x, fmt), fmt))
+    np.testing.assert_array_equal(back, vq)
+    assert np.signbit(back[4]) and back[4] == 0.0  # signed zero survives
+
+
+def test_subnormals_matter_for_small_weights():
+    """S1E4 formats: min-normal 2^-6 would flush init-scale weights under FTZ."""
+    fmt = FloatFormat(4, 14)
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.normal(size=(4096,), scale=0.02).astype(np.float32))
+    vq = np.asarray(value_quantize(w, fmt))
+    zero_frac = float(np.mean(vq == 0))
+    assert zero_frac < 1e-3  # with FTZ this would be ~50%
+    rel = np.abs(vq - np.asarray(w)) / np.maximum(np.abs(np.asarray(w)), 1e-12)
+    assert float(np.median(rel)) < 2.0**-13
+
+
+def test_rne_rounding():
+    fmt = FloatFormat(8, 1)  # mantissa {1.0, 1.5} × 2^e
+    x = jnp.asarray([1.25, 1.75, 1.2499999, 1.7500001], jnp.float32)
+    vq = np.asarray(value_quantize(x, fmt))
+    np.testing.assert_array_equal(vq, [1.0, 2.0, 1.0, 2.0])  # ties to even
+
+
+def test_container_dtypes():
+    assert FloatFormat(2, 3).container_dtype == jnp.uint8
+    assert FloatFormat(3, 7).container_dtype == jnp.uint16
+    assert FloatFormat(4, 14).container_dtype == jnp.uint32
+    assert FloatFormat(8, 23).container_dtype == jnp.uint32
+
+
+def test_parse_and_name():
+    f = FloatFormat.parse("s1e3m7")
+    assert f.name == "S1E3M7" and f.bits == 11
+    with pytest.raises(ValueError):
+        FloatFormat.parse("E3M7")
+    with pytest.raises(ValueError):
+        FloatFormat(9, 3)
+
+
+def test_qdq_ste_gradient_is_identity():
+    fmt = FloatFormat(2, 3)
+    g = jax.grad(lambda x: jnp.sum(qdq_ste(x, fmt) ** 2))(jnp.asarray([0.3, 1.7]))
+    # d/dx sum(qdq(x)^2) with STE = 2*qdq(x)
+    np.testing.assert_allclose(
+        np.asarray(g), 2 * np.asarray(value_quantize(jnp.asarray([0.3, 1.7]), fmt))
+    )
+
+
+# ---------------------------------------------------------------------------
+# Property tests (hypothesis)
+# ---------------------------------------------------------------------------
+
+finite_f32 = st.floats(allow_nan=False, allow_infinity=False, width=32)
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.lists(finite_f32, min_size=1, max_size=64), st.sampled_from(FORMATS))
+def test_prop_roundtrip_matches_oracle(vals, fmt):
+    x = jnp.asarray(np.array(vals, np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(decode(encode(x, fmt), fmt)), np.asarray(value_quantize(x, fmt))
+    )
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(finite_f32, min_size=1, max_size=64))
+def test_prop_error_shrinks_with_more_mantissa_bits(vals):
+    """More mantissa bits at equal exponent bits never increases max error."""
+    x = np.array(vals, np.float32)
+    xj = jnp.asarray(x)
+    errs = []
+    for z in (3, 7, 14):
+        fmt = FloatFormat(4, z)
+        xc = np.clip(x, -fmt.max_normal, fmt.max_normal)
+        errs.append(float(np.max(np.abs(np.asarray(value_quantize(xj, fmt)) - xc))))
+    assert errs[0] >= errs[1] >= errs[2]
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    st.integers(min_value=1, max_value=300),
+    st.integers(min_value=1, max_value=32),
+    st.integers(min_value=0, max_value=2**32 - 1),
+)
+def test_prop_pack_unpack_roundtrip(n, width, seed):
+    rng = np.random.default_rng(seed)
+    maxv = (1 << width) - 1 if width < 32 else 0xFFFFFFFF
+    codes = jnp.asarray(rng.integers(0, maxv + 1, size=(n,), dtype=np.uint64).astype(np.uint32))
+    words = pack(codes, width)
+    assert words.shape[0] == packed_words(n, width)
+    out = unpack(words, width, n)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(codes))

@@ -1,0 +1,78 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.formats import FloatFormat, decode, encode, value_quantize
+from repro.core.packing import pack, packed_words, unpack
+from repro.federated.cohort import CohortPlan, survival_mask
+from repro.models.common import resolve_spec
+
+fmt_st = st.builds(FloatFormat, st.integers(2, 8), st.integers(1, 23))
+
+
+@settings(max_examples=40, deadline=None)
+@given(fmt_st, st.integers(1, 300), st.integers(0, 2**31 - 1))
+def test_encode_decode_roundtrip(fmt, n, seed):
+    """decode(encode(q)) == q for every representable value."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,)) * 4.0
+    q = value_quantize(x, fmt)
+    rt = decode(encode(q, fmt, quantize=False), fmt)
+    np.testing.assert_array_equal(np.asarray(rt), np.asarray(q))
+
+
+@settings(max_examples=40, deadline=None)
+@given(fmt_st, st.integers(1, 200), st.integers(0, 2**31 - 1))
+def test_quantize_idempotent_and_bounded(fmt, n, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,)) * 10.0
+    q = value_quantize(x, fmt)
+    # idempotent
+    np.testing.assert_array_equal(np.asarray(value_quantize(q, fmt)),
+                                  np.asarray(q))
+    # saturating: no infs, and |q| <= max_normal
+    assert np.isfinite(np.asarray(q)).all()
+    assert (np.abs(np.asarray(q)) <= fmt.max_normal + 1e-30).all()
+    # error bounded by one subnormal step or relative half-ulp
+    err = np.abs(np.asarray(q) - np.clip(np.asarray(x), -fmt.max_normal,
+                                         fmt.max_normal))
+    bound = np.maximum(np.abs(np.asarray(x)) * 2.0 ** (-fmt.mant_bits),
+                       fmt.subnormal_step)
+    assert (err <= bound * 0.5 + 1e-30).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 32), st.integers(1, 500), st.integers(0, 2**31 - 1))
+def test_pack_unpack_roundtrip(width, n, seed):
+    mask = jnp.uint32((1 << width) - 1 if width < 32 else 0xFFFFFFFF)
+    codes = jax.random.bits(jax.random.PRNGKey(seed), (n,), jnp.uint32) & mask
+    words = pack(codes, width)
+    assert words.shape[0] == packed_words(n, width)
+    rt = unpack(words, width, n)
+    np.testing.assert_array_equal(np.asarray(rt), np.asarray(codes))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 64), st.integers(1, 64),
+       st.floats(0, 0.9), st.floats(0, 0.9), st.integers(0, 100))
+def test_survival_mask_invariants(cohort, goal, fail, straggle, rnd):
+    goal = min(goal, cohort)
+    plan = CohortPlan(num_clients=cohort * 2, cohort_size=cohort,
+                      report_goal=goal, failure_rate=fail,
+                      straggler_rate=straggle)
+    m = survival_mask(jax.random.PRNGKey(7), plan, rnd)
+    assert 1 <= int(m.sum()) <= goal
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 4096), st.integers(1, 4096))
+def test_resolve_spec_divisibility(a, b):
+    """resolve_spec never assigns a mesh axis that doesn't divide the dim."""
+    import os
+    mesh = jax.sharding.Mesh(
+        np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model")
+    )
+    spec = resolve_spec(["batch", "tensor"], [a, b], mesh)
+    # on a (1,1) mesh everything resolves (1 divides everything)
+    assert spec is not None

@@ -1,0 +1,77 @@
+"""pvt_solve_fast: agreement with the exact solver / numpy float64."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.formats import FloatFormat, value_quantize
+from repro.core.pvt import pvt_apply, pvt_solve, pvt_solve_fast
+
+
+def _np_solve(v, q):
+    v = np.asarray(v, np.float64).ravel()
+    q = np.asarray(q, np.float64).ravel()
+    n = v.size
+    den = n * (q * q).sum() - q.sum() ** 2
+    if den <= 0:
+        s = 1.0
+    else:
+        s = (n * (v * q).sum() - v.sum() * q.sum()) / den
+    b = (v.sum() - s * q.sum()) / n
+    return s, b
+
+
+@pytest.mark.parametrize("n", [100, 4097, 100_000])
+def test_fast_matches_float64(n):
+    v = jax.random.normal(jax.random.PRNGKey(n), (n,)) * 0.2
+    q = value_quantize(v, FloatFormat(3, 7))
+    s_f, b_f = pvt_solve_fast(v, q)
+    s_np, b_np = _np_solve(v, q)
+    np.testing.assert_allclose(float(s_f), s_np, rtol=5e-4)
+    np.testing.assert_allclose(float(b_f), b_np, atol=5e-6)
+
+
+def test_fast_matches_exact_solver():
+    v = jax.random.normal(jax.random.PRNGKey(0), (5000,))
+    q = value_quantize(v, FloatFormat(4, 8))
+    s1, b1 = pvt_solve(v, q)
+    s2, b2 = pvt_solve_fast(v, q)
+    np.testing.assert_allclose(float(s1), float(s2), rtol=1e-4)
+    np.testing.assert_allclose(float(b1), float(b2), atol=1e-5)
+
+
+def test_batch_axes_match_per_slice():
+    v = jax.random.normal(jax.random.PRNGKey(1), (3, 4, 64, 32))
+    q = value_quantize(v, FloatFormat(3, 7))
+    s, b = pvt_solve_fast(v, q, batch_axes=2)
+    assert s.shape == (3, 4, 1, 1) and b.shape == (3, 4, 1, 1)
+    for i in range(3):
+        for j in range(4):
+            si, bi = pvt_solve_fast(v[i, j], q[i, j])
+            np.testing.assert_allclose(float(s[i, j, 0, 0]), float(si), rtol=1e-5)
+            np.testing.assert_allclose(float(b[i, j, 0, 0]), float(bi), atol=1e-6)
+
+
+def test_degenerate_constant_variable():
+    v = jnp.full((512,), 0.017)
+    q = value_quantize(v, FloatFormat(2, 3))
+    s, b = pvt_solve_fast(v, q)
+    assert float(s) == 1.0  # paper's prescription for the degenerate case
+    # b absorbs the mean error exactly
+    np.testing.assert_allclose(
+        np.asarray(pvt_apply(q, s, b)), np.asarray(v), atol=1e-7
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(1, 4000), st.integers(0, 2**31 - 1))
+def test_pvt_never_increases_l2_error(n, seed):
+    """The least-squares property: ||s·q+b - v|| <= ||q - v||."""
+    v = jax.random.normal(jax.random.PRNGKey(seed), (n,)) * 0.5
+    q = value_quantize(v, FloatFormat(2, 3))
+    s, b = pvt_solve_fast(v, q)
+    e_pvt = float(jnp.sum((pvt_apply(q, s, b) - v) ** 2))
+    e_raw = float(jnp.sum((q - v) ** 2))
+    assert e_pvt <= e_raw * (1 + 1e-5) + 1e-10
