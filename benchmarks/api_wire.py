@@ -1,0 +1,89 @@
+"""Wire-format benchmark: payload size + codec latency (DESIGN.md §7).
+
+Measures, per minifloat format, the serialized download payload of a small
+transformer server state (full and round-over-round delta), encode/decode
+wall time, and the reconciliation against the core byte accounting
+(``state_bytes_report`` packed bytes must equal the payload body exactly).
+Emits ``experiments/bench/api_wire.json``.
+"""
+
+import time
+
+import jax
+
+from repro.api.codecs import decode_payload, payload_bytes_report
+from repro.api.session import FLClient, FLSession
+from repro.core.omc import OMCConfig
+from repro.data.synthetic import make_lm_task
+from repro.federated.cohort import CohortPlan
+from repro.federated.state import state_bytes_report
+from repro.models import transformer as tr
+from repro.models.common import IDENTITY_MAT
+
+from .common import print_table, save_result
+
+CFG = tr.TransformerConfig(n_layers=4, d_model=128, n_heads=8, n_kv_heads=4,
+                           d_ff=256, vocab=512)
+
+
+def _one_wire_round(fmt: str, client_lr: float = 0.05):
+    """Run one loopback round; return sizes + timings for the next round's
+    delta download (what a million repeat clients would fetch)."""
+    omc = OMCConfig.parse(fmt)
+    task = make_lm_task(vocab=CFG.vocab, seq_len=32, num_clients=4)
+
+    @jax.jit
+    def sgd_step(params, batch):
+        loss, g = jax.value_and_grad(
+            lambda p: tr.loss(CFG, p, batch, IDENTITY_MAT))(params)
+        return jax.tree_util.tree_map(
+            lambda w, gg: w - client_lr * gg, params, g), loss
+
+    def train_fn(params, cid, r):
+        params, _ = sgd_step(params, task.batch(cid, r, 0, 4))
+        return params
+
+    plan = CohortPlan(num_clients=4, cohort_size=2)
+    sess = FLSession(tr, CFG, omc, plan=plan)
+    clients = {c: FLClient(c, tr, CFG, omc, train_fn) for c in range(4)}
+
+    t0 = time.time()
+    full = sess.server_payload()
+    t_encode = time.time() - t0
+    t0 = time.time()
+    decode_payload(full)
+    t_decode = time.time() - t0
+
+    ticket = sess.begin_round()
+    for cid in ticket.client_ids:
+        sess.ingest(cid, clients[cid].run_round(ticket))
+    sess.close_round()
+
+    t0 = time.time()
+    delta = sess.server_payload(delta=True)
+    t_delta = time.time() - t0
+
+    rep = payload_bytes_report(sess.storage)
+    state_rep = state_bytes_report(sess.storage)
+    assert rep["wire_bytes"] == state_rep["packed_bytes"]
+    return dict(
+        fmt=fmt,
+        full_bytes=len(full),
+        delta_bytes=len(delta),
+        fp32_bytes=rep["fp32_bytes"],
+        full_pct=round(100 * len(full) / rep["fp32_bytes"], 1),
+        delta_pct=round(100 * len(delta) / rep["fp32_bytes"], 1),
+        encode_ms=round(t_encode * 1e3, 1),
+        decode_ms=round(t_decode * 1e3, 1),
+        delta_encode_ms=round(t_delta * 1e3, 1),
+        reconciled=True,
+    )
+
+
+def run():
+    rows = [_one_wire_round(fmt) for fmt in ("S1E5M10", "S1E4M8", "S1E3M7")]
+    print_table("Wire payloads (download; delta = round-over-round)", rows,
+                ["fmt", "full_bytes", "full_pct", "delta_bytes", "delta_pct",
+                 "encode_ms", "decode_ms", "delta_encode_ms"])
+    save_result("api_wire", rows)
+    return rows

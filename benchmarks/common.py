@@ -1,6 +1,6 @@
 """Shared benchmark harness: paper-table reproductions at simulation scale.
 
-Every benchmark follows the same recipe (DESIGN.md §7): train the paper's
+Every benchmark follows the same recipe (DESIGN.md §8): train the paper's
 Conformer (reduced, CPU-trainable) or a small LM under the *faithful*
 federated simulation (per-client PPQ, transport re-quantization) and compare
 FP32 vs OMC on loss curves + exact byte accounting — WER -> loss parity

@@ -1,0 +1,32 @@
+"""Wire-format API: compressed payloads and FL/serve sessions (DESIGN.md §7).
+
+The paper's premise is that model parameters live *compressed* at rest and on
+the wire.  ``repro.core.store`` provides the at-rest form; this package is the
+on-the-wire form and the client/server boundary built on it:
+
+  * :mod:`repro.api.codecs` — versioned binary payload codec.  Serializes a
+    storage pytree (``CompressedVariable`` leaves at the exact packed
+    bitwidth, everything else raw f32) to bytes and back, bit-exactly, with
+    crc32 integrity, version negotiation, and a round-over-round sparse
+    XOR-delta mode for repeat downloads.
+  * :mod:`repro.api.session` — ``FLSession`` (server side: owns compressed
+    state, hands out per-round cohort payloads, ingests client uploads,
+    aggregates and re-compresses) and ``ServeSession`` (inference side:
+    batched decode over compressed weights with payload hot-swap between
+    rounds).
+  * ``python -m repro.api.demo --smoke`` — a loopback
+    download→train→upload→aggregate driver exercising the full wire path.
+"""
+
+from .codecs import (  # noqa: F401
+    CodecError,
+    PayloadInfo,
+    WIRE_VERSION,
+    decode_payload,
+    encode_payload,
+    negotiate_version,
+    payload_bytes_report,
+    peek_payload,
+    tree_digest,
+)
+from .session import FLClient, FLSession, RoundTicket, ServeSession  # noqa: F401

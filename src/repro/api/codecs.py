@@ -1,0 +1,534 @@
+"""Versioned binary wire codec for compressed parameter trees (DESIGN.md §7).
+
+A *payload* is the serialized form of a storage pytree (the thing
+``compress_tree`` / ``compress_params`` produce): ``CompressedVariable``
+leaves travel as their exact-width packed bitstream (11 bits/param for
+S1E3M7 — the paper's communication saving), everything else travels raw.
+The codec is host-side (numpy) and bit-exact: ``decode(encode(t)) == t``
+code-for-code, so wire transport composes with the storage-mode numerics
+without introducing a second rounding step.
+
+Frame layout (little-endian, version 1)::
+
+    magic     4s   b"OMCW"
+    version   u16
+    flags     u16  bit 0: payload is a delta against a base tree
+    round     u32  producer round index (informational)
+    mlen      u32  manifest length in bytes
+    blen      u64  body length in bytes
+    crc       u32  zlib.crc32(manifest + body)
+    digest    u32  tree_digest of the delta base (0 for full payloads);
+                   decode verifies the receiver's base tree against it, so
+                   applying a delta to the wrong round's model fails loudly
+    manifest  mlen bytes of JSON (tagged leaf paths — dict/list/tuple
+              containers are preserved — kinds, shapes, modes)
+    body      blen bytes (per-leaf sections in manifest order)
+
+Per-leaf body sections:
+
+  * ``omc``/``full``:  s (f32), b (f32), packed codes (u32 words).
+  * ``omc``/``delta``: s, b, sorted u32 indices of changed codes, packed
+    XOR-of-codes for those indices.  The XOR is against the *base* tree's
+    codes (round r-1 for a repeat download); after a small server step most
+    codes are unchanged, so the sparse form shrinks repeat downloads.
+  * ``raw``/``full``:  the array bytes.
+  * ``raw``/``delta``: sorted u32 indices + u32 XOR words over the array's
+    32-bit bitview (4-byte dtypes only).
+
+The encoder picks ``delta`` per leaf only when it is actually smaller than
+``full`` (a dense update degenerates to full — no silent size regression),
+so ``encode_payload(tree, base=prev)`` is never worse than
+``encode_payload(tree)`` by more than the per-leaf mode flag.
+
+Byte accounting: for a full payload the body is exactly
+``packed_bytes(n, fmt) + 8·s.size`` per compressed leaf plus ``itemsize·n``
+per raw leaf — the same accounting ``tree_bytes_report`` /
+``state_bytes_report`` call ``packed_bytes`` — so wire measurements and the
+paper-table byte columns reconcile by construction
+(:func:`payload_bytes_report` computes it without serializing).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import struct
+import zlib
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing
+from repro.core.formats import FloatFormat
+from repro.core.store import CompressedVariable, is_compressed
+
+MAGIC = b"OMCW"
+WIRE_VERSION = 1
+SUPPORTED_VERSIONS = (1,)
+
+FLAG_DELTA = 1 << 0
+
+# magic, version, flags, round, manifest len, body len, crc, base digest
+_HEADER = struct.Struct("<4sHHIIQII")
+_PVT_BYTES_PER_ENTRY = 8  # s and b, f32 each
+
+
+class CodecError(ValueError):
+    """Malformed, corrupt, or version-incompatible payload."""
+
+
+@dataclasses.dataclass(frozen=True)
+class PayloadInfo:
+    """Parsed frame metadata (available without decoding the body)."""
+
+    version: int
+    flags: int
+    round_index: int
+    header_bytes: int  # fixed header + manifest
+    body_bytes: int
+    total_bytes: int
+    num_leaves: int
+    num_compressed: int
+    num_delta: int
+    base_digest: int  # tree_digest of the delta base; 0 for full payloads
+
+    @property
+    def is_delta(self) -> bool:
+        return bool(self.flags & FLAG_DELTA)
+
+
+def negotiate_version(peer_versions: Sequence[int]) -> int:
+    """Highest wire version both ends speak (server calls this per client)."""
+    common = set(SUPPORTED_VERSIONS) & set(int(v) for v in peer_versions)
+    if not common:
+        raise CodecError(
+            f"no common wire version: we speak {SUPPORTED_VERSIONS}, "
+            f"peer speaks {tuple(peer_versions)}"
+        )
+    return max(common)
+
+
+# ---------------------------------------------------------------------------
+# pytree <-> flat (path, leaf) list.  Wire trees are nested dict/list/tuple
+# containers (what every model family's init() produces).  Container types
+# are recorded in the path tags ('k' dict key, 'i' list index, 't' tuple
+# index) so decode rebuilds the exact treedef — tuples stay tuples.
+# ---------------------------------------------------------------------------
+
+
+def _flatten(tree) -> List[Tuple[List[Any], Any]]:
+    out: List[Tuple[List[Any], Any]] = []
+
+    def walk(node, prefix):
+        if is_compressed(node):
+            out.append((prefix, node))
+        elif isinstance(node, dict):
+            if not node:
+                raise CodecError("empty dict container is not serializable")
+            for k in sorted(node):  # jax tree order: sorted dict keys
+                if not isinstance(k, str):
+                    raise CodecError(f"non-string dict key {k!r} in wire tree")
+                walk(node[k], prefix + [["k", k]])
+        elif isinstance(node, (list, tuple)):
+            if not node:
+                raise CodecError("empty sequence container is not serializable")
+            tag = "i" if isinstance(node, list) else "t"
+            for j, v in enumerate(node):
+                walk(v, prefix + [[tag, j]])
+        else:
+            out.append((prefix, node))
+
+    walk(tree, [])
+    return out
+
+
+class _Node:
+    __slots__ = ("tag", "kids")
+
+    def __init__(self, tag):
+        self.tag = tag
+        self.kids: Dict[Any, Any] = {}
+
+
+def _unflatten(entries: List[Tuple[List[Any], Any]]):
+    """Rebuild nested dicts/lists/tuples from tagged paths."""
+    if not entries:
+        return {}
+    if not entries[0][0]:
+        if len(entries) != 1:
+            raise CodecError("multiple leaves with an empty path")
+        return entries[0][1]
+    root = _Node(entries[0][0][0][0])
+    for parts, leaf in entries:
+        node = root
+        for depth, (tag, key) in enumerate(parts):
+            if node.tag != tag:
+                raise CodecError("inconsistent container tags in manifest")
+            if depth == len(parts) - 1:
+                node.kids[key] = leaf
+            else:
+                child = node.kids.get(key)
+                if not isinstance(child, _Node):
+                    child = _Node(parts[depth + 1][0])
+                    node.kids[key] = child
+                node = child
+
+    def materialize(n):
+        if not isinstance(n, _Node):
+            return n
+        if n.tag == "k":
+            return {k: materialize(v) for k, v in n.kids.items()}
+        try:
+            seq = [materialize(n.kids[i]) for i in range(len(n.kids))]
+        except KeyError as e:
+            raise CodecError(f"missing sequence index in manifest: {e}") from e
+        return seq if n.tag == "i" else tuple(seq)
+
+    return materialize(root)
+
+
+def _path_key(parts: List[Any]) -> str:
+    return "/".join(str(v) for _, v in parts)
+
+
+def tree_digest(tree) -> int:
+    """crc32 fingerprint of a storage tree (paths + codes + PVT scalars).
+
+    Delta payloads embed the digest of the base they were encoded against;
+    decode verifies the receiver's base matches, so applying a delta to the
+    wrong round's model is a loud `CodecError`, not silent corruption.
+    """
+    h = 0
+    for parts, leaf in _flatten(tree):
+        h = zlib.crc32(_path_key(parts).encode(), h)
+        if is_compressed(leaf):
+            h = zlib.crc32(np.ascontiguousarray(np.asarray(leaf.codes)).tobytes(), h)
+            h = zlib.crc32(
+                np.ascontiguousarray(np.asarray(leaf.s, np.float32)).tobytes(), h
+            )
+            h = zlib.crc32(
+                np.ascontiguousarray(np.asarray(leaf.b, np.float32)).tobytes(), h
+            )
+            h = zlib.crc32(leaf.fmt.name.encode(), h)
+        else:
+            h = zlib.crc32(np.ascontiguousarray(np.asarray(leaf)).tobytes(), h)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# per-leaf encoding
+# ---------------------------------------------------------------------------
+
+
+def _codes_np(cv: CompressedVariable) -> np.ndarray:
+    return np.asarray(cv.codes).reshape(-1)
+
+
+def _pack_np(codes_flat: np.ndarray, bits: int) -> np.ndarray:
+    return np.asarray(packing.pack(codes_flat, bits), np.uint32)
+
+
+def _encode_omc(cv: CompressedVariable, base) -> Tuple[Dict[str, Any], List[bytes]]:
+    fmt = cv.fmt
+    s = np.ascontiguousarray(np.asarray(cv.s, np.float32))
+    b = np.ascontiguousarray(np.asarray(cv.b, np.float32))
+    codes = _codes_np(cv)
+    meta = dict(
+        kind="omc",
+        fmt=fmt.name,
+        shape=list(cv.codes.shape),
+        sb_shape=list(s.shape),
+        mode="full",
+    )
+    full_words = _pack_np(codes, fmt.bits)
+    chunks = [s.tobytes(), b.tobytes()]
+    if (
+        base is not None
+        and is_compressed(base)
+        and base.fmt == fmt
+        and tuple(base.codes.shape) == tuple(cv.codes.shape)
+    ):
+        xor = codes.astype(np.uint32) ^ _codes_np(base).astype(np.uint32)
+        (idx,) = np.nonzero(xor)
+        delta_bytes = 4 * idx.size + 4 * packing.packed_words(max(idx.size, 1), fmt.bits)
+        if idx.size and delta_bytes < 4 * full_words.size:
+            meta["mode"] = "delta"
+            meta["nnz"] = int(idx.size)
+            chunks.append(np.ascontiguousarray(idx.astype(np.uint32)).tobytes())
+            chunks.append(_pack_np(xor[idx], fmt.bits).tobytes())
+            return meta, chunks
+        if idx.size == 0:
+            meta["mode"] = "delta"
+            meta["nnz"] = 0
+            return meta, chunks
+    chunks.append(full_words.tobytes())
+    return meta, chunks
+
+
+def _encode_raw(leaf, base) -> Tuple[Dict[str, Any], List[bytes]]:
+    arr = np.ascontiguousarray(np.asarray(leaf))
+    meta = dict(
+        kind="raw",
+        dtype=arr.dtype.str,
+        shape=list(arr.shape),
+        mode="full",
+    )
+    if (
+        base is not None
+        and not is_compressed(base)
+        and hasattr(base, "dtype")
+        and np.asarray(base).dtype == arr.dtype
+        and np.asarray(base).shape == arr.shape
+        and arr.dtype.itemsize == 4
+    ):
+        xor = arr.view(np.uint32).reshape(-1) ^ np.ascontiguousarray(
+            np.asarray(base)
+        ).view(np.uint32).reshape(-1)
+        (idx,) = np.nonzero(xor)
+        if 8 * idx.size < arr.nbytes:
+            meta["mode"] = "delta"
+            meta["nnz"] = int(idx.size)
+            return meta, [
+                np.ascontiguousarray(idx.astype(np.uint32)).tobytes(),
+                np.ascontiguousarray(xor[idx]).tobytes(),
+            ]
+    return meta, [arr.tobytes()]
+
+
+def _decode_omc(meta: Dict[str, Any], body: memoryview, off: int, base):
+    fmt = FloatFormat.parse(meta["fmt"])
+    shape = tuple(meta["shape"])
+    sb_shape = tuple(meta.get("sb_shape", ()))
+    n = int(np.prod(shape)) if shape else 1
+    n_sb = int(np.prod(sb_shape)) if sb_shape else 1
+    s = np.frombuffer(body, np.float32, n_sb, off).reshape(sb_shape)
+    off += 4 * n_sb
+    b = np.frombuffer(body, np.float32, n_sb, off).reshape(sb_shape)
+    off += 4 * n_sb
+    if meta["mode"] == "delta":
+        if base is None or not is_compressed(base):
+            raise CodecError(
+                "delta leaf but no compressed base variable was supplied"
+            )
+        if base.fmt != fmt or tuple(base.codes.shape) != shape:
+            raise CodecError("delta base mismatch (format or shape)")
+        codes = _codes_np(base).astype(np.uint32).copy()
+        nnz = int(meta["nnz"])
+        if nnz:
+            idx = np.frombuffer(body, np.uint32, nnz, off)
+            off += 4 * nnz
+            nwords = packing.packed_words(nnz, fmt.bits)
+            words = np.frombuffer(body, np.uint32, nwords, off)
+            off += 4 * nwords
+            xor = np.asarray(packing.unpack(words, fmt.bits, nnz), np.uint32)
+            codes[idx] ^= xor
+    else:
+        nwords = packing.packed_words(n, fmt.bits)
+        words = np.frombuffer(body, np.uint32, nwords, off)
+        off += 4 * nwords
+        codes = np.asarray(packing.unpack(words, fmt.bits, n), np.uint32)
+    cv = CompressedVariable(
+        jnp.asarray(codes.reshape(shape).astype(np.dtype(fmt.container_dtype))),
+        jnp.asarray(s.reshape(sb_shape), jnp.float32),
+        jnp.asarray(b.reshape(sb_shape), jnp.float32),
+        fmt,
+    )
+    return cv, off
+
+
+def _decode_raw(meta: Dict[str, Any], body: memoryview, off: int, base):
+    dtype = np.dtype(meta["dtype"])
+    shape = tuple(meta["shape"])
+    n = int(np.prod(shape)) if shape else 1
+    if meta["mode"] == "delta":
+        if base is None or is_compressed(base):
+            raise CodecError("delta leaf but no matching raw base was supplied")
+        barr = np.ascontiguousarray(np.asarray(base))
+        if barr.dtype != dtype or barr.shape != shape:
+            raise CodecError("delta base mismatch (dtype or shape)")
+        bits = barr.view(np.uint32).reshape(-1).copy()
+        nnz = int(meta["nnz"])
+        if nnz:
+            idx = np.frombuffer(body, np.uint32, nnz, off)
+            off += 4 * nnz
+            xor = np.frombuffer(body, np.uint32, nnz, off)
+            off += 4 * nnz
+            bits[idx] ^= xor
+        arr = bits.view(dtype).reshape(shape)
+    else:
+        arr = np.frombuffer(body, dtype, n, off).reshape(shape)
+        off += dtype.itemsize * n
+    return jnp.asarray(arr), off
+
+
+# ---------------------------------------------------------------------------
+# public API
+# ---------------------------------------------------------------------------
+
+
+def encode_payload(tree, *, base=None, round_index: int = 0) -> bytes:
+    """Serialize a storage pytree to a wire payload.
+
+    ``base`` (the tree the receiver already holds, e.g. the previous round's
+    model) switches each leaf to sparse XOR-delta encoding when that is
+    smaller; the receiver must then pass the same base to
+    :func:`decode_payload`.
+    """
+    base_leaves: Dict[str, Any] = {}
+    if base is not None:
+        base_leaves = {_path_key(p): leaf for p, leaf in _flatten(base)}
+
+    manifest: List[Dict[str, Any]] = []
+    chunks: List[bytes] = []
+    any_delta = False
+    for parts, leaf in _flatten(tree):
+        bleaf = base_leaves.get(_path_key(parts))
+        if is_compressed(leaf):
+            meta, ch = _encode_omc(leaf, bleaf)
+        else:
+            meta, ch = _encode_raw(leaf, bleaf)
+        any_delta |= meta["mode"] == "delta"
+        meta["path"] = parts
+        manifest.append(meta)
+        chunks.extend(ch)
+
+    mjson = json.dumps(dict(leaves=manifest), separators=(",", ":")).encode()
+    body = b"".join(chunks)
+    flags = FLAG_DELTA if any_delta else 0
+    digest = tree_digest(base) if any_delta else 0
+    crc = zlib.crc32(body, zlib.crc32(mjson))
+    header = _HEADER.pack(
+        MAGIC, WIRE_VERSION, flags, int(round_index), len(mjson), len(body),
+        crc, digest,
+    )
+    return header + mjson + body
+
+
+def _parse_frame(data: bytes) -> Tuple[PayloadInfo, Dict[str, Any], memoryview]:
+    """Validate framing + checksum; parse the manifest exactly once."""
+    if len(data) < _HEADER.size:
+        raise CodecError(f"payload truncated: {len(data)} bytes")
+    magic, ver, flags, rnd, mlen, blen, crc, digest = _HEADER.unpack_from(data)
+    if magic != MAGIC:
+        raise CodecError(f"bad magic {magic!r}")
+    if ver not in SUPPORTED_VERSIONS:
+        raise CodecError(
+            f"unsupported wire version {ver}; supported: {SUPPORTED_VERSIONS}"
+        )
+    if len(data) != _HEADER.size + mlen + blen:
+        raise CodecError(
+            f"length mismatch: header says {_HEADER.size + mlen + blen}, "
+            f"got {len(data)}"
+        )
+    mview = memoryview(data)
+    payload = mview[_HEADER.size:]
+    if zlib.crc32(payload) != crc:
+        raise CodecError("checksum mismatch: payload corrupt")
+    try:
+        manifest = json.loads(bytes(payload[:mlen]).decode())
+        leaves = manifest["leaves"]
+    except Exception as e:  # malformed manifest despite valid crc framing
+        raise CodecError(f"malformed manifest: {e}") from e
+    info = PayloadInfo(
+        version=ver,
+        flags=flags,
+        round_index=rnd,
+        header_bytes=_HEADER.size + mlen,
+        body_bytes=blen,
+        total_bytes=len(data),
+        num_leaves=len(leaves),
+        num_compressed=sum(1 for l in leaves if l["kind"] == "omc"),
+        num_delta=sum(1 for l in leaves if l["mode"] == "delta"),
+        base_digest=digest,
+    )
+    return info, manifest, mview[info.header_bytes :]
+
+
+def peek_payload(data: bytes) -> PayloadInfo:
+    """Validate framing + checksum and return sizes, without decoding."""
+    return _parse_frame(data)[0]
+
+
+def header_base_digest(data: bytes) -> int:
+    """Base digest straight from the header — no checksum scan.  For cheap
+    delta-vs-full routing decisions; integrity is still enforced at decode."""
+    if len(data) < _HEADER.size:
+        raise CodecError(f"payload truncated: {len(data)} bytes")
+    magic, _, flags, _, _, _, _, digest = _HEADER.unpack_from(data)
+    if magic != MAGIC:
+        raise CodecError(f"bad magic {magic!r}")
+    return digest if flags & FLAG_DELTA else 0
+
+
+def decode_payload(data: bytes, *, base=None) -> Tuple[Any, PayloadInfo]:
+    """Payload bytes -> (storage pytree, PayloadInfo).  Bit-exact inverse of
+    :func:`encode_payload`.
+
+    Delta payloads require the encoder's ``base`` and verify it by digest —
+    supplying a different tree (e.g. the wrong round's model) raises
+    `CodecError` instead of silently producing corrupt parameters.  For full
+    payloads ``base`` is ignored, so callers may always pass what they hold.
+    """
+    info, manifest, body = _parse_frame(data)
+    if info.is_delta:
+        if base is None:
+            raise CodecError(
+                "delta payload requires the base tree it was built on"
+            )
+        if tree_digest(base) != info.base_digest:
+            raise CodecError(
+                "delta base mismatch: payload was encoded against a different "
+                "tree than the one supplied (stale or wrong-round base)"
+            )
+    base_leaves: Dict[str, Any] = {}
+    if base is not None:
+        base_leaves = {_path_key(p): leaf for p, leaf in _flatten(base)}
+
+    entries = []
+    off = 0
+    for meta in manifest["leaves"]:
+        parts = [list(p) for p in meta["path"]]
+        bleaf = base_leaves.get(_path_key(parts))
+        if meta["kind"] == "omc":
+            leaf, off = _decode_omc(meta, body, off, bleaf)
+        elif meta["kind"] == "raw":
+            leaf, off = _decode_raw(meta, body, off, bleaf)
+        else:
+            raise CodecError(f"unknown leaf kind {meta['kind']!r}")
+        entries.append((parts, leaf))
+    if off != info.body_bytes:
+        raise CodecError(f"body length mismatch: consumed {off}, have {info.body_bytes}")
+    return _unflatten(entries), info
+
+
+def payload_bytes_report(tree) -> Dict[str, Any]:
+    """Theoretical full-payload body size for a storage tree.
+
+    Uses the exact accounting the store layer uses (``packed_bytes`` + 8
+    bytes of PVT scalars per entry), so for any tree
+    ``payload_bytes_report(t)["wire_bytes"] ==
+    state_bytes_report(t)["packed_bytes"]`` and a serialized full payload's
+    ``body_bytes`` equals it too.
+    """
+    wire = fp32 = n_params = n_comp = 0
+    for _, leaf in _flatten(tree):
+        if is_compressed(leaf):
+            n = int(leaf.codes.size)
+            n_params += n
+            n_comp += n
+            fp32 += 4 * n
+            wire += packing.packed_bytes(n, leaf.fmt)
+            wire += _PVT_BYTES_PER_ENTRY * int(np.asarray(leaf.s).size)
+        else:
+            arr = np.asarray(leaf)
+            n_params += int(arr.size)
+            fp32 += 4 * int(arr.size)
+            wire += int(arr.nbytes)
+    return dict(
+        num_params=n_params,
+        num_compressed=n_comp,
+        fp32_bytes=fp32,
+        wire_bytes=wire,
+        wire_ratio=wire / max(fp32, 1),
+    )

@@ -1,0 +1,164 @@
+"""Loopback wire-format demo: download → train → upload → aggregate.
+
+Runs the full client/server boundary in one process: the server
+(``FLSession``) hands out compressed wire payloads, loopback clients
+(``FLClient``) decode them, run local SGD on their synthetic shard, and
+upload delta-encoded payloads; the server aggregates and re-compresses.
+After the rounds a ``ServeSession`` hot-swaps the final model payload and
+generates a few tokens over the compressed weights.
+
+    PYTHONPATH=src python -m repro.api.demo --smoke
+
+Prints a per-round payload-bytes report and checks it reconciles with
+``tree_bytes_report`` (the compressed download must be <= 60% of the f32
+baseline for S1E3M7 — the paper's ~59% reduction claim; DESIGN.md §7).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.omc import OMCConfig
+from repro.core.store import tree_bytes_report
+from repro.data.synthetic import make_lm_task
+from repro.federated.cohort import CohortPlan
+from repro.federated.state import state_bytes_report
+from repro.models import transformer as tr
+from repro.models.common import IDENTITY_MAT
+
+from .codecs import payload_bytes_report
+from .session import FLClient, FLSession, ServeSession
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny model + 2 rounds (CI-sized)")
+    ap.add_argument("--fmt", default="S1E3M7")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--cohort", type=int, default=4)
+    ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--client-lr", type=float, default=0.05)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    rounds = args.rounds or (2 if args.smoke else 8)
+
+    if args.smoke:
+        cfg = tr.TransformerConfig(n_layers=2, d_model=64, n_heads=4,
+                                   n_kv_heads=2, d_ff=128, vocab=256)
+    else:
+        cfg = tr.TransformerConfig(n_layers=4, d_model=128, n_heads=8,
+                                   n_kv_heads=4, d_ff=256, vocab=512)
+    omc = OMCConfig.parse(args.fmt)
+    task = make_lm_task(vocab=cfg.vocab, seq_len=32, num_clients=args.clients)
+
+    @jax.jit
+    def local_sgd(params, batches):
+        def step(p, batch):
+            loss, g = jax.value_and_grad(
+                lambda q: tr.loss(cfg, q, batch, IDENTITY_MAT)
+            )(p)
+            p = jax.tree_util.tree_map(
+                lambda w, gg: w - args.client_lr * gg, p, g
+            )
+            return p, loss
+        params, losses = jax.lax.scan(step, params, batches)
+        return params, losses.mean()
+
+    losses = {}
+
+    def train_fn(params, client_id, round_index):
+        batches = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs),
+            *[task.batch(client_id, round_index, s, args.batch)
+              for s in range(args.local_steps)],
+        )
+        trained, loss = local_sgd(params, batches)
+        losses[client_id] = float(loss)
+        return trained
+
+    plan = CohortPlan(num_clients=args.clients, cohort_size=args.cohort)
+    server = FLSession(tr, cfg, omc, plan=plan, seed=args.seed)
+    clients = {
+        cid: FLClient(cid, tr, cfg, omc, train_fn)
+        for cid in range(args.clients)
+    }
+
+    # reconcile the codec's byte accounting with the core reports: exact
+    # against state_bytes_report (both count 8 B per PVT (s, b) entry), and
+    # within the per-variable-vs-per-entry PVT overhead of tree_bytes_report
+    wire = payload_bytes_report(server.storage)
+    state_rep = state_bytes_report(server.storage)
+    theory = tree_bytes_report(
+        tr.init(jax.random.PRNGKey(args.seed), cfg), omc.fmt, omc.policy,
+        fraction=1.0,
+    )
+    assert wire["wire_bytes"] == state_rep["packed_bytes"], (wire, state_rep)
+    assert abs(wire["wire_bytes"] - theory["packed_bytes"]) <= (
+        0.01 * theory["packed_bytes"]
+    ), (wire, theory)
+    print(f"model: {wire['num_params'] / 1e6:.2f} M params, fmt {omc.fmt.name}")
+    print(f"wire body (codec):        {wire['wire_bytes']:>9d} B "
+          f"({wire['wire_ratio']:.1%} of f32)")
+    print(f"state_bytes_report packed: {state_rep['packed_bytes']:>8d} B (exact)")
+    print(f"tree_bytes_report packed:  {theory['packed_bytes']:>8d} B "
+          f"({theory['packed_ratio']:.1%} of f32)")
+
+    serve = None
+    for r in range(rounds):
+        if r == rounds - 1:
+            # snapshot the pre-final-round model into a serving session; the
+            # final round's delta payload will hot-swap against exactly it
+            serve = ServeSession.from_payload(tr, cfg, server.server_payload())
+        ticket = server.begin_round()
+        up_bytes = []
+        for cid in ticket.client_ids:
+            upload = clients[cid].run_round(ticket)
+            info = server.ingest(cid, upload)
+            up_bytes.append(info.total_bytes)
+        down_b = list(ticket.issued_bytes)
+        n_delta = ticket.issued_delta
+        m = server.close_round()
+        fp32 = wire["fp32_bytes"]
+        mean_loss = sum(losses[c] for c in ticket.client_ids) / len(ticket.client_ids)
+        mean_down = sum(down_b) // len(down_b)
+        print(f"round {m['round']}: loss={mean_loss:.4f} "
+              f"reports={m['reports']}/{m['invited']} "
+              f"down={mean_down}B/client ({mean_down / fp32:.1%} of f32, "
+              f"{n_delta}/{len(down_b)} delta) "
+              f"up={sum(up_bytes) // len(up_bytes)}B/client")
+
+    t = server.traffic
+    down_ratio = t["down_bytes"] / max(t["down_fp32_bytes"], 1)
+    up_ratio = t["up_bytes"] / max(t["up_fp32_bytes"], 1)
+    print(f"totals: down {t['down_bytes']}B ({down_ratio:.1%} of f32), "
+          f"up {t['up_bytes']}B ({up_ratio:.1%} of f32)")
+
+    # serve over the wire: hot-swap the final round's delta payload into the
+    # session snapshotted before that round, then generate on the new weights
+    info = serve.hot_swap(server.server_payload(delta=True))
+    cache = serve.init_cache(2, 64)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    _, gen = serve.generate(dict(tokens=toks), cache, 8)
+    print(f"serve: hot-swapped round-{info.round_index} payload "
+          f"({info.total_bytes}B, delta={info.is_delta}); generated "
+          f"{gen.shape[1]} tokens/seq over compressed weights")
+
+    ok = down_ratio <= 0.60
+    enforced = omc.fmt.name == "S1E3M7"
+    print(f"payload check: download {down_ratio:.1%} of f32 "
+          f"({'<=' if ok else '>'} 60% target; "
+          f"{'enforced for' if enforced else 'informational for'} "
+          f"{omc.fmt.name})")
+    if not ok and enforced:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,295 @@
+"""FL and serving sessions over the wire codec (DESIGN.md §7).
+
+``FLSession`` is the server side of the paper's training loop expressed at
+the client/server boundary: the server state is *compressed at rest*
+(``CompressedVariable`` leaves), each round it hands out a wire payload of
+that state (full, or sparse-delta against the previous round for clients
+that held it), ingests client uploads (themselves wire payloads, usually
+delta-encoded against the download), aggregates with cohort-aware weighting
+(:mod:`repro.federated.cohort` semantics — failures and stragglers drop
+reports), and re-compresses.  No persistent f32 master exists between
+rounds, matching :mod:`repro.federated.simulate` numerics.
+
+``ServeSession`` is the inference side: batched prefill/decode over the
+compressed weights via ``make_serve_fns``, with ``hot_swap`` ingesting a new
+round's payload *without recompiling* — the storage pytree keeps its
+treedef/shapes/dtypes, so the jitted functions are reused as-is.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.omc import OMCConfig
+from repro.core.store import decompress_tree
+from repro.federated import cohort as cohort_lib
+from repro.federated.round import make_serve_fns
+from repro.federated.state import compress_params, state_bytes_report
+
+from . import codecs
+
+
+@dataclasses.dataclass
+class RoundTicket:
+    """What the server hands a transport for one round of downloads."""
+
+    round_index: int
+    client_ids: List[int]
+    payload: bytes  # full payload (new / fallen-behind clients)
+    delta_payload: Optional[bytes]  # vs the previous round's model, if any
+    delta_base_digest: int = 0  # tree_digest the delta applies to (0: none)
+    issued_bytes: List[int] = dataclasses.field(default_factory=list)
+    issued_delta: int = 0  # how many clients actually took the delta
+
+    def payload_for(self, *, has_previous_round: bool) -> bytes:
+        """Pick the download for one client and record its size (the
+        session folds ``issued_bytes`` into traffic at close_round)."""
+        if has_previous_round and self.delta_payload is not None:
+            blob = self.delta_payload
+            self.issued_delta += 1
+        else:
+            blob = self.payload
+        self.issued_bytes.append(len(blob))
+        return blob
+
+
+class FLSession:
+    """Server-side federated session over compressed wire payloads.
+
+    Lifecycle per round::
+
+        ticket = sess.begin_round()            # cohort ids + download payload
+        for cid in ticket.client_ids:          # transport delivers payloads,
+            blob = client_train(...)           # clients train and upload
+            sess.ingest(cid, blob)
+        metrics = sess.close_round()           # aggregate + re-compress
+
+    ``ingest`` accepts uploads delta-encoded against this round's download
+    (the normal case) or full payloads; ``close_round`` FedAvg-aggregates
+    whatever reports arrived (report-goal semantics: a partial cohort is
+    fine) and applies the server update with learning rate ``server_lr``.
+    """
+
+    def __init__(
+        self,
+        family,
+        cfg,
+        omc: OMCConfig,
+        *,
+        plan: Optional[cohort_lib.CohortPlan] = None,
+        server_lr: float = 1.0,
+        seed: int = 0,
+        init_params=None,
+    ):
+        self.family = family
+        self.cfg = cfg
+        self.omc = omc
+        self.plan = plan
+        self.server_lr = float(server_lr)
+        self.specs = family.param_specs(cfg)
+        key = jax.random.PRNGKey(seed)
+        params = family.init(key, cfg) if init_params is None else init_params
+        self.storage = (
+            compress_params(params, self.specs, omc) if omc.enabled else params
+        )
+        self._prev_storage = None  # round r-1 model: delta base for downloads
+        self._cohort_key = jax.random.fold_in(key, 0xC047)
+        self.round_index = 0
+        self._reports: Dict[int, Any] = {}
+        self._ticket: Optional[RoundTicket] = None
+        # f32 baseline depends only on leaf shapes — constant for the session
+        self._fp32_bytes = state_bytes_report(self.storage)["fp32_bytes"]
+        self.traffic = dict(down_bytes=0, up_bytes=0, down_fp32_bytes=0,
+                            up_fp32_bytes=0)
+
+    # -- payload side -------------------------------------------------------
+
+    def server_payload(self, *, delta: bool = False) -> bytes:
+        """Wire payload of the current server model (optionally vs round-1)."""
+        base = self._prev_storage if delta else None
+        return codecs.encode_payload(
+            self.storage, base=base, round_index=self.round_index
+        )
+
+    def begin_round(self) -> RoundTicket:
+        """Sample the round's cohort and build its download payload(s)."""
+        if self._ticket is not None:
+            raise RuntimeError("round already open; call close_round() first")
+        if self.plan is not None:
+            ids = [
+                int(i)
+                for i in cohort_lib.sample_cohort(
+                    self._cohort_key, self.plan, self.round_index
+                )
+            ]
+        else:
+            ids = [0]
+        full = self.server_payload()
+        delta = (
+            self.server_payload(delta=True) if self._prev_storage is not None
+            else None
+        )
+        self._ticket = RoundTicket(
+            self.round_index, ids, full, delta,
+            delta_base_digest=(
+                codecs.header_base_digest(delta) if delta is not None else 0
+            ),
+        )
+        self._reports = {}
+        return self._ticket
+
+    def ingest(self, client_id: int, blob: bytes) -> codecs.PayloadInfo:
+        """Accept one client upload (delta vs this round's download, or full)."""
+        if self._ticket is None:
+            raise RuntimeError("no open round; call begin_round() first")
+        if client_id not in self._ticket.client_ids:
+            raise KeyError(f"client {client_id} is not in this round's cohort")
+        tree, info = codecs.decode_payload(blob, base=self.storage)
+        self._reports[client_id] = decompress_tree(tree)
+        self.traffic["up_bytes"] += info.total_bytes
+        self.traffic["up_fp32_bytes"] += self._fp32_bytes
+        return info
+
+    def close_round(self) -> Dict[str, Any]:
+        """Aggregate the received reports, apply the server step, re-compress."""
+        if self._ticket is None:
+            raise RuntimeError("no open round; call begin_round() first")
+        if not self._reports:
+            raise RuntimeError("round closed with zero reports")
+        models = list(self._reports.values())
+        weights = jnp.ones((len(models),), jnp.float32)
+        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *models)
+        mean_model = cohort_lib.aggregate_weighted(stacked, weights)
+        server_f32 = decompress_tree(self.storage)
+        new_f32 = jax.tree_util.tree_map(
+            lambda old, new: old + self.server_lr * (new - old),
+            server_f32,
+            mean_model,
+        )
+        self._prev_storage = self.storage
+        self.storage = (
+            compress_params(new_f32, self.specs, self.omc)
+            if self.omc.enabled
+            else new_f32
+        )
+        self.traffic["down_bytes"] += sum(self._ticket.issued_bytes)
+        self.traffic["down_fp32_bytes"] += (
+            self._fp32_bytes * len(self._ticket.issued_bytes)
+        )
+        metrics = dict(
+            round=self.round_index,
+            reports=len(models),
+            invited=len(self._ticket.client_ids),
+            **{k: int(v) for k, v in self.traffic.items()},
+        )
+        self.round_index += 1
+        self._ticket = None
+        self._reports = {}
+        return metrics
+
+
+class FLClient:
+    """Loopback client: decode download, train, upload a delta payload.
+
+    ``train_fn(params_f32, client_id, round_index) -> params_f32`` is the
+    local optimization (the demo uses a few SGD steps on the client's
+    synthetic shard).  The client caches the last model it decoded and takes
+    the delta download only when the delta's base digest matches that cache
+    (a cohort-skipped client holds a stale model and falls back to the full
+    payload — never a silent wrong-base decode).  The upload is
+    re-compressed under the session policy (transport compression, paper §2)
+    and delta-encoded against the *received* model, so unchanged codes cost
+    ~0 wire bytes.
+    """
+
+    def __init__(self, client_id: int, family, cfg, omc: OMCConfig,
+                 train_fn: Callable[[Any, int, int], Any]):
+        self.client_id = client_id
+        self.specs = family.param_specs(cfg)
+        self.omc = omc
+        self.train_fn = train_fn
+        self._cache = None  # last decoded download tree (this client's model)
+        self._cache_digest = 0
+
+    def run_round(self, ticket: RoundTicket) -> bytes:
+        use_delta = (
+            ticket.delta_payload is not None
+            and self._cache is not None
+            and ticket.delta_base_digest == self._cache_digest
+        )
+        blob = ticket.payload_for(has_previous_round=use_delta)
+        tree, _ = codecs.decode_payload(
+            blob, base=self._cache if use_delta else None
+        )
+        self._cache = tree
+        self._cache_digest = codecs.tree_digest(tree)
+        params = decompress_tree(tree)
+        trained = self.train_fn(params, self.client_id, ticket.round_index)
+        upload_tree = (
+            compress_params(trained, self.specs, self.omc)
+            if self.omc.enabled
+            else trained
+        )
+        return codecs.encode_payload(
+            upload_tree, base=tree, round_index=ticket.round_index
+        )
+
+
+class ServeSession:
+    """Batched decode over compressed weights with payload hot-swap.
+
+    Wraps ``make_serve_fns``: prefill/decode are jitted once; ``hot_swap``
+    replaces the storage tree from a wire payload between rounds without
+    touching the compiled functions (same treedef/shapes/dtypes).
+    """
+
+    def __init__(self, family, cfg, storage, compute_dtype=jnp.float32):
+        self.family = family
+        self.cfg = cfg
+        self.storage = storage
+        prefill_fn, decode_fn = make_serve_fns(family, cfg, compute_dtype)
+        self._prefill = jax.jit(prefill_fn)
+        self._decode = jax.jit(decode_fn)
+        self.swaps = 0
+
+    @classmethod
+    def from_payload(cls, family, cfg, payload: bytes, **kw) -> "ServeSession":
+        storage, _ = codecs.decode_payload(payload)
+        return cls(family, cfg, storage, **kw)
+
+    def hot_swap(self, payload: bytes) -> codecs.PayloadInfo:
+        """Ingest a new round's model; delta payloads apply against the
+        currently-served tree (digest-verified — a wrong-round payload
+        raises rather than corrupting the served weights)."""
+        self.storage, info = codecs.decode_payload(payload, base=self.storage)
+        self.swaps += 1
+        return info
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.float32):
+        return self.family.init_decode_state(self.cfg, batch, max_len,
+                                             dtype=dtype)
+
+    def prefill(self, batch, cache):
+        return self._prefill(self.storage, batch, cache)
+
+    def decode_step(self, cache, tokens):
+        return self._decode(self.storage, cache, tokens)
+
+    def generate(self, batch, cache, steps: int, *,
+                 sample: Callable[[jax.Array], jax.Array] = None):
+        """Greedy (or ``sample``-driven) generation; returns (cache, tokens)."""
+        if steps < 1:
+            raise ValueError(f"steps must be >= 1, got {steps}")
+        pick = sample or (lambda logits: jnp.argmax(logits, axis=-1))
+        cache, logits = self.prefill(batch, cache)
+        tok = pick(logits[:, -1])[:, None]
+        out = [tok]
+        for _ in range(steps - 1):
+            cache, logits = self.decode_step(cache, tok)
+            tok = pick(logits[:, -1])[:, None]
+            out.append(tok)
+        return cache, jnp.concatenate(out, axis=1)

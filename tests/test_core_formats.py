@@ -4,8 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_stub import given, settings, st
 
 from repro.core.formats import FP32, FloatFormat, decode, encode, qdq_ste, value_quantize
 from repro.core.packing import pack, packed_bytes, packed_words, unpack

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.launch.mesh import compat_make_mesh
 from repro.models import moe
 from repro.models.common import activate_mesh
 
@@ -24,8 +25,7 @@ def test_shard_map_matches_reference_1x1():
     w = _ffn_weights(jax.random.PRNGKey(0))
     x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32))
     y_ref, aux_ref = moe.moe_ffn(x, w, CFG)
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat_make_mesh((1, 1), ("data", "model"))
     with activate_mesh(mesh):
         y_sm, aux_sm = jax.jit(lambda x, w: moe.moe_ffn(x, w, CFG))(x, w)
     np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_sm),
@@ -38,6 +38,7 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, numpy as np
 import jax.numpy as jnp
+from repro.launch.mesh import compat_make_mesh
 from repro.models import moe
 from repro.models.common import activate_mesh
 
@@ -47,8 +48,7 @@ blk = moe._block_init(jax.random.PRNGKey(0), cfg)
 w = {k: blk[k] for k in ("router", "w1", "w3", "w2")}
 x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 32))
 y_ref, aux_ref = moe.moe_ffn(x, w, cfg)
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = compat_make_mesh((2, 4), ("data", "model"))
 with activate_mesh(mesh):
     y_sm, aux_sm = jax.jit(lambda x, w: moe.moe_ffn(x, w, cfg))(x, w)
 # capacity differs per-shard (T_local < T), so token drops may differ around

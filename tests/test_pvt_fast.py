@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_stub import given, settings, st
 
 from repro.core.formats import FloatFormat, value_quantize
 from repro.core.pvt import pvt_apply, pvt_solve, pvt_solve_fast
