@@ -1,0 +1,225 @@
+"""Cohort-scale benchmark: loop vs vectorized rounds/sec (DESIGN.md §9).
+
+Times the per-client reference loop (:mod:`repro.federated.simulate`)
+against the vectorized engine (:mod:`repro.federated.engine`) on identical
+rounds — same cohort sample, survival mask, PPQ masks, and data stream —
+across growing cohort sizes.  Compilation is excluded (one warm-up round per
+path per size); timed rounds are *interleaved* between the two paths so
+shared-host CPU noise hits both equally, and the reported number is the
+per-path median s/round.  Each row also carries the engine's exact
+wire-byte accounting and its reconciliation against the wire codec
+(``payload_bytes_report`` must equal the table's download bytes).
+
+The model and per-client batch are deliberately small (the tier-1 test
+Conformer): FL *simulation* throughput at research scale is overhead-bound
+— per-client jit dispatches, eager data generation, and the fixed
+per-thunk cost of running a small program once per client — which is
+precisely what the engine amortizes by executing the whole round as one
+XLA program.  Raise ``--batch``/``--seq`` to study the compute-bound
+regime (the gap narrows toward the pure-compute ratio).
+
+    PYTHONPATH=src python benchmarks/cohort_scale.py            # full sweep
+    PYTHONPATH=src python benchmarks/cohort_scale.py --smoke    # CI-sized
+    PYTHONPATH=src python benchmarks/cohort_scale.py --tiers s1e3m7,s1e4m3,f32
+
+Emits ``experiments/bench/cohort_scale.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+try:
+    from .common import print_table, save_result
+except ImportError:  # run as a script: python benchmarks/cohort_scale.py
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from common import print_table, save_result
+
+from repro.api.codecs import payload_bytes_report
+from repro.core.omc import OMCConfig
+from repro.data.synthetic import make_frame_task
+from repro.federated import accounting, engine, simulate
+from repro.federated.cohort import CohortPlan
+from repro.models import conformer as cf
+
+CFG = cf.ConformerConfig(
+    n_layers=2, d_model=32, n_heads=4, d_ff=64, n_classes=16, d_in=8
+)
+
+
+def _setup(cohort: int, batch: int, seq: int):
+    plan = CohortPlan(num_clients=2 * cohort, cohort_size=cohort)
+    task = make_frame_task(d_in=CFG.d_in, n_classes=CFG.n_classes,
+                           seq_len=seq, num_clients=plan.num_clients)
+    data_fn = lambda c, r, s: task.batch(c, r, s, batch)
+    return plan, data_fn
+
+
+def _median(xs):
+    xs = sorted(xs)
+    n = len(xs)
+    return xs[n // 2] if n % 2 else 0.5 * (xs[n // 2 - 1] + xs[n // 2])
+
+
+def bench_size(cohort: int, rounds: int, batch: int, seq: int,
+               fmt: str, seed: int) -> dict:
+    omc = OMCConfig.parse(fmt)
+    sim = simulate.SimConfig(local_steps=1, client_lr=0.1)
+    plan, data_fn = _setup(cohort, batch, seq)
+    specs = cf.param_specs(CFG)
+    key = jax.random.PRNGKey(seed)
+    params = cf.init(key, CFG)
+    storage0 = engine.compress_params(params, specs, omc)
+    table = accounting.build_wire_table(params, specs, omc)
+    rkey = jax.random.fold_in(key, 0xC047)
+
+    client_update = simulate.make_client_update(cf, CFG, specs, omc, sim)
+    spec = engine.CohortSpec(plan)
+    round_fn = engine.make_round_fn(cf, CFG, specs, omc, sim, spec, data_fn)
+    # compile both paths (round 0, untimed)
+    simulate.run_round(cf, CFG, specs, omc, sim, storage0, data_fn, plan,
+                       0, rkey, client_update=client_update)
+    engine.run_round_vectorized(cf, CFG, specs, omc, sim, storage0, data_fn,
+                                spec, 0, rkey, round_fn=round_fn)
+
+    # interleave the two paths round-by-round so shared-host CPU noise hits
+    # both equally; report per-path medians
+    loop_t, vec_t = [], []
+    loop_storage = vec_storage = storage0
+    for r in range(1, rounds + 1):
+        t0 = time.perf_counter()
+        loop_storage, loop_metrics = simulate.run_round(
+            cf, CFG, specs, omc, sim, loop_storage, data_fn, plan, r, rkey,
+            client_update=client_update, wire_table=table,
+        )
+        loop_t.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        vec_storage, vec_metrics = engine.run_round_vectorized(
+            cf, CFG, specs, omc, sim, vec_storage, data_fn, spec, r, rkey,
+            round_fn=round_fn, wire_table=table,
+        )
+        vec_t.append(time.perf_counter() - t0)
+    loop_s, vec_s = _median(loop_t), _median(vec_t)
+
+    # --- cross-checks: identical accounting, codec reconciliation ---------
+    wire_match = (
+        loop_metrics["down_bytes"] == vec_metrics["down_bytes"]
+        and loop_metrics["up_bytes"] == vec_metrics["up_bytes"]
+    )
+    codec_match = (
+        payload_bytes_report(storage0)["wire_bytes"]
+        == table.download_bytes(omc)
+    )
+    return dict(
+        cohort=cohort,
+        loop_s_per_round=round(loop_s, 4),
+        vec_s_per_round=round(vec_s, 4),
+        loop_rounds_per_s=round(1.0 / loop_s, 3),
+        vec_rounds_per_s=round(1.0 / vec_s, 3),
+        speedup=round(loop_s / vec_s, 2),
+        down_bytes=vec_metrics["down_bytes"],
+        up_bytes=vec_metrics["up_bytes"],
+        wire_match=wire_match,
+        codec_match=codec_match,
+    )
+
+
+def bench_tiers(cohort: int, rounds: int, batch: int, seq: int,
+                tier_names, fmt: str, seed: int) -> dict:
+    """Engine-only timing of a mixed-bitwidth cohort (no loop counterpart —
+    the reference loop has no tier concept)."""
+    omc = OMCConfig.parse(fmt)
+    sim = simulate.SimConfig(local_steps=1, client_lr=0.1)
+    plan, data_fn = _setup(cohort, batch, seq)
+    specs = cf.param_specs(CFG)
+    key = jax.random.PRNGKey(seed)
+    params = cf.init(key, CFG)
+    storage0 = engine.compress_params(params, specs, omc)
+    table = accounting.build_wire_table(params, specs, omc)
+    rkey = jax.random.fold_in(key, 0xC047)
+    spec = engine.CohortSpec(
+        plan, tiers=tuple(engine.profile(n) for n in tier_names)
+    )
+    round_fn = engine.make_round_fn(cf, CFG, specs, omc, sim, spec, data_fn)
+    engine.run_round_vectorized(cf, CFG, specs, omc, sim, storage0, data_fn,
+                                spec, 0, rkey, round_fn=round_fn)
+    t0 = time.perf_counter()
+    storage = storage0
+    for r in range(1, rounds + 1):
+        storage, m = engine.run_round_vectorized(
+            cf, CFG, specs, omc, sim, storage, data_fn, spec, r, rkey,
+            round_fn=round_fn, wire_table=table,
+        )
+    vec_s = (time.perf_counter() - t0) / rounds
+    return dict(
+        cohort=cohort, tiers=",".join(tier_names), quotas=list(spec.quotas),
+        vec_s_per_round=round(vec_s, 4),
+        vec_rounds_per_s=round(1.0 / vec_s, 3),
+        down_bytes=m["down_bytes"], up_bytes=m["up_bytes"],
+    )
+
+
+def run(cohorts=(4, 16, 64), rounds=5, batch=1, seq=8, fmt="S1E3M7",
+        seed=0, tiers=None, smoke=False):
+    # suite budget knob (DESIGN.md §8): a reduced BENCH_ROUNDS caps the
+    # timed rounds too, so `BENCH_ROUNDS=2 python -m benchmarks.run` shrinks
+    # this benchmark along with the others; cohort sizes / batch / seq have
+    # their own flags (they set the measurement regime, not the budget)
+    rounds = max(1, min(rounds, int(os.environ.get("BENCH_ROUNDS", rounds))))
+    rows = [bench_size(c, rounds, batch, seq, fmt, seed) for c in cohorts]
+    print_table(
+        "Cohort scaling: loop vs vectorized (steady-state s/round)",
+        rows,
+        ["cohort", "loop_s_per_round", "vec_s_per_round", "speedup",
+         "wire_match", "codec_match"],
+    )
+    payload = dict(smoke=smoke, fmt=fmt, rounds=rounds, batch=batch,
+                   seq_len=seq, sizes=rows)
+    if tiers:
+        hrow = bench_tiers(max(cohorts), rounds, batch, seq, tiers, fmt, seed)
+        print_table("Mixed-bitwidth cohort (engine only)", [hrow],
+                    ["cohort", "tiers", "vec_s_per_round", "up_bytes"])
+        payload["hetero"] = hrow
+    path = save_result("cohort_scale", payload)
+    print(f"wrote {path}")
+    assert all(r["wire_match"] and r["codec_match"] for r in rows), rows
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized: cohorts 4,8 and 2 timed rounds")
+    ap.add_argument("--cohorts", default=None,
+                    help="comma-separated cohort sizes (default 4,16,64)")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--seq", type=int, default=8)
+    ap.add_argument("--fmt", default="S1E3M7")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--tiers", default=None,
+                    help="comma-separated profile names for a hetero row, "
+                         "e.g. s1e3m7,s1e4m3,f32")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        cohorts = (4, 8)
+        rounds = args.rounds or 2
+    else:
+        cohorts = tuple(int(c) for c in (args.cohorts or "4,16,64").split(","))
+        rounds = args.rounds or 5
+    tiers = args.tiers.split(",") if args.tiers else None
+    run(cohorts=cohorts, rounds=rounds, batch=args.batch, seq=args.seq,
+        fmt=args.fmt, seed=args.seed, tiers=tiers, smoke=args.smoke)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -4,8 +4,10 @@ Pretrains a streaming Conformer on a source domain in FP32, then adapts to
 a target domain with aggressive 6-bit (S1E2M3) OMC — adaptation tolerates
 much coarser formats than from-scratch training.
 
-    PYTHONPATH=src python examples/domain_adaptation.py
+    PYTHONPATH=src python examples/domain_adaptation.py [--smoke]
 """
+
+import argparse
 
 import jax
 
@@ -34,17 +36,23 @@ def evaluate(params):
     return float(sum(f(params, b) for b in batches) / len(batches))
 
 
+ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+ap.add_argument("--smoke", action="store_true", help="2 rounds per phase (CI-sized)")
+ap.add_argument("--rounds", type=int, default=None)
+args = ap.parse_args()
+rounds = args.rounds or (2 if args.smoke else 16)
+
 print("pretraining on source domain (FP32)...")
 pre, _ = simulate.run_training(
     cf, cfg, OMCConfig.parse("S1E8M23"), sim, plan,
     lambda c, r, s: src.batch(c, r, s, 4), jax.random.PRNGKey(0),
-    num_rounds=16, log=print)
+    num_rounds=rounds, log=print)
 print(f"target-domain loss before adaptation: {evaluate(decompress_tree(pre)):.4f}")
 
 print("adapting on target domain with 6-bit OMC (S1E2M3)...")
 adapted, _ = simulate.run_training(
     cf, cfg, OMCConfig.parse("S1E2M3"), sim, plan,
     lambda c, r, s: tgt.batch(c, r, s, 4), jax.random.PRNGKey(1),
-    num_rounds=16, init_params=decompress_tree(pre), log=print)
+    num_rounds=rounds, init_params=decompress_tree(pre), log=print)
 print(f"target-domain loss after 6-bit adaptation: "
       f"{evaluate(decompress_tree(adapted)):.4f}")

@@ -17,6 +17,8 @@ baseline for S1E3M7 — the paper's ~59% reduction claim; DESIGN.md §7).
 from __future__ import annotations
 
 import argparse
+import json
+import os
 
 import jax
 import jax.numpy as jnp
@@ -155,6 +157,20 @@ def main(argv=None) -> int:
           f"({'<=' if ok else '>'} 60% target; "
           f"{'enforced for' if enforced else 'informational for'} "
           f"{omc.fmt.name})")
+    if args.smoke:
+        # CI artifact (benchmarks/README.md): the smoke run's traffic record
+        out_dir = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                               "experiments", "bench")
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir, "api_demo_smoke.json")
+        with open(path, "w") as f:
+            json.dump(dict(fmt=omc.fmt.name, rounds=rounds,
+                           down_ratio=round(down_ratio, 4),
+                           up_ratio=round(up_ratio, 4),
+                           wire_bytes=wire["wire_bytes"],
+                           fp32_bytes=wire["fp32_bytes"],
+                           **{k: int(v) for k, v in t.items()}), f, indent=1)
+        print(f"wrote {os.path.normpath(path)}")
     if not ok and enforced:
         return 1
     return 0

@@ -35,7 +35,13 @@ from . import codecs
 
 @dataclasses.dataclass
 class RoundTicket:
-    """What the server hands a transport for one round of downloads."""
+    """What the server hands a transport for one round of downloads.
+
+    ``profiles`` maps each invited client to its device-profile name
+    (heterogeneous-tier cohorts, DESIGN.md §9): the download payload is the
+    same server-format model for every tier, but the transport uses the
+    profile to anticipate the client's upload format and the engine's wire
+    accounting budgets per-tier bytes from it."""
 
     round_index: int
     client_ids: List[int]
@@ -44,6 +50,7 @@ class RoundTicket:
     delta_base_digest: int = 0  # tree_digest the delta applies to (0: none)
     issued_bytes: List[int] = dataclasses.field(default_factory=list)
     issued_delta: int = 0  # how many clients actually took the delta
+    profiles: Dict[int, str] = dataclasses.field(default_factory=dict)
 
     def payload_for(self, *, has_previous_round: bool) -> bytes:
         """Pick the download for one client and record its size (the
@@ -84,11 +91,15 @@ class FLSession:
         server_lr: float = 1.0,
         seed: int = 0,
         init_params=None,
+        profile_fn: Optional[Callable[[int], str]] = None,
     ):
         self.family = family
         self.cfg = cfg
         self.omc = omc
         self.plan = plan
+        # client id -> device-profile name (engine.PROFILES keys); stamped
+        # onto every RoundTicket so transports know each client's tier
+        self.profile_fn = profile_fn
         self.server_lr = float(server_lr)
         self.specs = family.param_specs(cfg)
         key = jax.random.PRNGKey(seed)
@@ -137,6 +148,10 @@ class FLSession:
             self.round_index, ids, full, delta,
             delta_base_digest=(
                 codecs.header_base_digest(delta) if delta is not None else 0
+            ),
+            profiles=(
+                {cid: self.profile_fn(cid) for cid in ids}
+                if self.profile_fn is not None else {}
             ),
         )
         self._reports = {}

@@ -9,3 +9,10 @@ from .synthetic import (
     make_lm_task,
     make_frame_task,
 )
+from .partition import (
+    DirichletPartition,
+    DomainPartition,
+    IIDPartition,
+    ShardPartition,
+    make_partitioned_batch_fn,
+)

@@ -115,8 +115,12 @@ class FrameTask:
     context: int = 2  # label depends on +-context frames
     speaker_bias: float = 1.0  # non-IID frame shift magnitude
 
-    def probe(self) -> jax.Array:
-        k = jax.random.fold_in(jax.random.PRNGKey(self.seed + 10), self.domain)
+    def probe(self, domain=None) -> jax.Array:
+        """Label probe for ``domain`` (default: the task's own).  ``domain``
+        may be traced — partitioners route clients to domains inside the
+        vectorized engine's program (repro.data.partition)."""
+        d = self.domain if domain is None else domain
+        k = jax.random.fold_in(jax.random.PRNGKey(self.seed + 10), d)
         return jax.random.normal(
             k, (self.d_in * (2 * self.context + 1), self.n_classes)
         )

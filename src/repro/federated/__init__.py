@@ -1,6 +1,22 @@
-"""Federated runtime: OMC materialization, jit-able rounds, simulation."""
+"""Federated runtime: OMC materialization, jit-able rounds, simulation.
+
+Three execution paths for the paper's loop (DESIGN.md §9 has the guide):
+  * :mod:`.simulate` — the per-client reference loop (numerics ground truth),
+  * :mod:`.engine` — the vectorized heterogeneous-cohort engine (vmap/scan
+    over stacked client states; production-scale cohorts),
+  * :mod:`.round` — the jit-able distributed round (multi-pod lowering).
+"""
 
 from .materialize import OMCMaterializer, QParam, make_sinks, pack_qparams
 from .state import TrainState, init_state, state_bytes_report
 from .round import make_round_fn, make_eval_fn
-from .cohort import CohortPlan, sample_cohort
+from .cohort import CohortPlan, sample_cohort, survival_mask
+from .accounting import WireTable, build_wire_table
+from .engine import (
+    CohortSpec,
+    DeviceProfile,
+    PROFILES,
+    run_round_vectorized,
+    run_training_vectorized,
+    sample_tiered_cohort,
+)

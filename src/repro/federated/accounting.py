@@ -1,0 +1,167 @@
+"""Wire-byte accounting shared by both federated execution paths (DESIGN.md §9).
+
+A :class:`WireTable` is built once per model from the f32 param tree: one row
+per policy-selected variable, in the *exact order* ``ppq_mask`` indexes them
+(the ``tree_map_with_path`` traversal order used by
+:func:`repro.federated.simulate.client_view`).  From it, per-round byte
+counts follow from the PPQ masks alone:
+
+  * download — the server's full compressed state (every selected variable
+    packed under the server format, everything else f32),
+  * upload — a client's transport re-quantization: selected variables whose
+    PPQ bit is set travel packed under the *client's* format (heterogeneous
+    tiers may use a different bitwidth), masked-out variables travel f32.
+
+The per-leaf sizes are the same ``packed_bytes(n, fmt) + 8 B·(s, b)`` the
+wire codec produces, so for any storage tree the table reconciles exactly
+with :func:`repro.api.codecs.payload_bytes_report` and with the body of a
+serialized full payload (tested in ``tests/test_engine.py``).
+
+The reference loop (:mod:`repro.federated.simulate`) computes uploads one
+scalar ``ppq_mask`` at a time; the vectorized engine
+(:mod:`repro.federated.engine`) uses ``ppq_masks_batch`` over the whole
+cohort.  The engine equivalence test asserts the two agree to the byte.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import numpy as np
+
+from repro.core import packing
+from repro.core.omc import OMCConfig
+from repro.core.partial import ppq_mask, ppq_masks_batch
+from repro.core.policy import path_str
+from repro.models.common import ParamSpec
+
+from .state import n_stack_axes, selected
+
+_PVT_BYTES_PER_ENTRY = 8  # s and b, f32 each — matches the codec and store
+
+# eager vmap re-traces per call (tens of ms/round — it showed up in
+# cohort_scale); the mask computations are pure, so jit them once per shape
+_ppq_mask = jax.jit(ppq_mask, static_argnums=(3, 4))
+_ppq_masks_batch = jax.jit(ppq_masks_batch, static_argnums=(3, 4))
+
+
+@dataclasses.dataclass(frozen=True)
+class WireTable:
+    """Per-selected-variable wire sizes, in PPQ mask-index order."""
+
+    names: Tuple[str, ...]  # selected variable paths
+    n_elems: Tuple[int, ...]  # element count per variable
+    stack_entries: Tuple[int, ...]  # PVT (s, b) entries (stacked-axis prod)
+    raw_bytes: int  # non-selected leaves: f32 wire bytes
+
+    @property
+    def num_vars(self) -> int:
+        return len(self.names)
+
+    @property
+    def fp32_total(self) -> int:
+        """Wire bytes of the whole model sent uncompressed."""
+        return self.raw_bytes + 4 * sum(self.n_elems)
+
+    def _packed(self, omc: OMCConfig) -> np.ndarray:
+        """int64[V]: per-variable bytes when packed under ``omc.fmt``."""
+        sb = np.asarray(self.stack_entries if omc.pvt
+                        else (1,) * self.num_vars, np.int64)
+        packed = np.asarray(
+            [packing.packed_bytes(n, omc.fmt) for n in self.n_elems], np.int64
+        )
+        return packed + _PVT_BYTES_PER_ENTRY * sb
+
+    def _fp32_vars(self) -> np.ndarray:
+        return 4 * np.asarray(self.n_elems, np.int64)
+
+    def download_bytes(self, omc: OMCConfig) -> int:
+        """One client's full download: the server's compressed-at-rest state."""
+        if not omc.enabled:
+            return self.fp32_total
+        return int(self._packed(omc).sum()) + self.raw_bytes
+
+    def upload_bytes(self, mask, omc: OMCConfig) -> int:
+        """One client's transport-compressed upload under its PPQ ``mask``."""
+        if not omc.enabled:
+            return self.fp32_total
+        m = np.asarray(mask, bool)
+        if m.shape != (self.num_vars,):
+            raise ValueError(
+                f"mask has shape {m.shape}, expected ({self.num_vars},)"
+            )
+        sizes = np.where(m, self._packed(omc), self._fp32_vars())
+        return int(sizes.sum()) + self.raw_bytes
+
+
+def walk_selected(params_f32, specs, omc: OMCConfig):
+    """The canonical traversal behind every PPQ mask index.
+
+    Returns ``([(name, spec, leaf)] for selected variables, raw f32 bytes of
+    everything else)``.  The list order IS the ``ppq_mask`` index order —
+    ``simulate.client_view``, ``engine.masked_upload_tree``, and
+    :func:`build_wire_table` all derive from this one function so the three
+    can never disagree about which mask bit gates which variable.
+    """
+    sel, raw = [], 0
+
+    def visit(path, spec, leaf):
+        nonlocal raw
+        if selected(omc, path_str(path), spec, leaf):
+            sel.append((path_str(path), spec, leaf))
+        elif hasattr(leaf, "size"):
+            raw += 4 * int(leaf.size)
+        return leaf
+
+    jax.tree_util.tree_map_with_path(
+        visit, specs, params_f32, is_leaf=lambda s: isinstance(s, ParamSpec)
+    )
+    return sel, raw
+
+
+def selected_names(params_f32, specs, omc: OMCConfig):
+    """Selected variable paths in PPQ mask-index order."""
+    return [name for name, _, _ in walk_selected(params_f32, specs, omc)[0]]
+
+
+def build_wire_table(params_f32, specs, omc: OMCConfig) -> WireTable:
+    """One table per model; valid for every round (shapes are static)."""
+    sel, raw = walk_selected(params_f32, specs, omc)
+    names, n_elems, stacks = [], [], []
+    for name, spec, leaf in sel:
+        names.append(name)
+        n_elems.append(int(leaf.size))
+        k = n_stack_axes(spec, leaf)
+        stacks.append(int(np.prod(leaf.shape[:k])) if k else 1)
+    return WireTable(tuple(names), tuple(n_elems), tuple(stacks), raw)
+
+
+def client_upload_bytes(
+    table: WireTable, omc: OMCConfig, round_index, client_id
+) -> int:
+    """Scalar path (the reference loop): one client's upload bytes."""
+    if not omc.enabled or table.num_vars == 0:
+        return table.fp32_total
+    mask = _ppq_mask(omc.ppq_key(), round_index, client_id, table.num_vars,
+                     omc.quantize_fraction)
+    return table.upload_bytes(mask, omc)
+
+
+def cohort_upload_bytes(
+    table: WireTable, omc: OMCConfig, round_index, client_ids
+) -> np.ndarray:
+    """Batched path (the engine): int64[C] upload bytes, one per client."""
+    c = int(np.asarray(client_ids).shape[0])
+    if not omc.enabled or table.num_vars == 0:
+        return np.full((c,), table.fp32_total, np.int64)
+    masks = np.asarray(
+        _ppq_masks_batch(omc.ppq_key(), round_index, client_ids,
+                         table.num_vars, omc.quantize_fraction),
+        bool,
+    )
+    packed = table._packed(omc)
+    fp32v = table._fp32_vars()
+    per_var = np.where(masks, packed[None, :], fp32v[None, :])
+    return per_var.sum(axis=1) + table.raw_bytes

@@ -48,8 +48,8 @@ def survival_mask(key: jax.Array, plan: CohortPlan, round_index) -> jax.Array:
     k = jax.random.fold_in(jax.random.fold_in(key, round_index), 0x57A6)
     kf, kl = jax.random.split(k)
     alive = jax.random.uniform(kf, (plan.cohort_size,)) >= plan.failure_rate
-    latency = jax.random.uniform(kl, (plan.cohort_size,))
-    latency = jnp.where(alive, latency, jnp.inf)
+    raw_latency = jax.random.uniform(kl, (plan.cohort_size,))
+    latency = jnp.where(alive, raw_latency, jnp.inf)
     n_keep = max(
         1,
         min(plan.report_goal,
@@ -58,10 +58,13 @@ def survival_mask(key: jax.Array, plan: CohortPlan, round_index) -> jax.Array:
     order = jnp.argsort(latency)
     keep = jnp.zeros((plan.cohort_size,), bool).at[order[:n_keep]].set(True)
     keep = keep & alive
-    # guarantee >= 1 survivor
+    # guarantee >= 1 survivor: when `alive` is all-False (e.g. at
+    # failure_rate=1.0) the masked latency is uniformly inf and argmin over
+    # it would always elect client 0 — the retried report must come from the
+    # *fastest* client, so the fallback ranks by the raw latency.
     any_alive = keep.any()
     keep = jnp.where(any_alive, keep,
-                     jnp.zeros_like(keep).at[jnp.argmin(latency)].set(True))
+                     jnp.zeros_like(keep).at[jnp.argmin(raw_latency)].set(True))
     return keep
 
 

@@ -1,0 +1,517 @@
+"""Vectorized heterogeneous-cohort simulation engine (DESIGN.md §9).
+
+The reference loop (:mod:`repro.federated.simulate`) runs one jitted client
+at a time — perfect for auditing paper numerics, quadratically painful for
+production-scale cohorts.  This module executes the whole round — built
+from the *same* single-client round body
+(:func:`repro.federated.simulate.make_client_fn`) — as ONE compiled XLA
+program (:func:`make_round_fn`):
+
+  * **stacked client states** — client ids, per-client RNG-derived PPQ mask
+    bits, and local batches all carry a leading cohort axis; the client
+    update is ``vmap``-ped over it (optionally chunked through ``lax.map``
+    — a scan of vmapped blocks — to bound peak memory at huge cohorts),
+  * **heterogeneous device tiers** — a cohort may mix bitwidths (e.g.
+    S1E3M7 / S1E4M3 / f32 clients).  Tier populations are disjoint
+    (round-robin over client ids) and the server samples a fixed per-tier
+    quota each round (stratified sampling — how production FL hits per-tier
+    report goals), so each tier is a static-shape segment of the round
+    program and nothing recompiles as cohort composition varies,
+  * **wire-byte accounting** — per-round download/upload bytes from the
+    shared :mod:`repro.federated.accounting` table, reconciled exactly
+    against :mod:`repro.api.codecs` payload sizes.
+
+Equivalence contract (tested in ``tests/test_engine.py``): with a single
+default tier, the engine consumes the same cohort sample, survival mask,
+PPQ masks, and data stream as the reference loop; client models differ only
+by batched-op reassociation (documented tolerance), and wire-byte
+accounting matches the loop path bit-for-bit.  See DESIGN.md §9 for the
+layout and the loop-vs-vectorized decision guide.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import FloatFormat
+from repro.core.omc import OMCConfig
+from repro.core.partial import ppq_mask
+from repro.core.policy import path_str
+from repro.core.store import compress_variable, decompress_tree
+from repro.models.common import ParamSpec
+
+from . import accounting
+from . import cohort as cohort_lib
+from . import simulate
+from .simulate import SimConfig
+from .state import compress_params, n_stack_axes
+
+
+# ---------------------------------------------------------------------------
+# Device profiles — per-client bitwidth tiers
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    """One device tier: how its clients quantize compute and transport.
+
+    ``fmt`` / ``quantize_fraction`` override the server's base
+    :class:`OMCConfig` for clients of this tier; ``None`` inherits.  A tier
+    with the identity format and fraction 1.0 runs f32 end to end (its
+    uploads travel uncompressed — the "new flagship phone" tier).
+    """
+
+    name: str = "default"
+    fmt: Optional[str] = None  # e.g. "S1E4M3"; None -> server format
+    quantize_fraction: Optional[float] = None  # None -> server fraction
+
+    def resolve(self, base: OMCConfig) -> OMCConfig:
+        kw: Dict[str, Any] = {}
+        if self.fmt is not None:
+            kw["fmt"] = FloatFormat.parse(self.fmt)
+        if self.quantize_fraction is not None:
+            kw["quantize_fraction"] = float(self.quantize_fraction)
+        return dataclasses.replace(base, **kw) if kw else base
+
+
+#: Ready-made tiers for the scenario cookbook (README) and benchmarks.
+PROFILES: Dict[str, DeviceProfile] = {
+    "default": DeviceProfile(),
+    "f32": DeviceProfile("f32", fmt="S1E8M23", quantize_fraction=1.0),
+    "s1e3m7": DeviceProfile("s1e3m7", fmt="S1E3M7"),
+    "s1e4m3": DeviceProfile("s1e4m3", fmt="S1E4M3"),
+    "s1e4m14": DeviceProfile("s1e4m14", fmt="S1E4M14"),
+}
+
+
+def profile(name: str) -> DeviceProfile:
+    try:
+        return PROFILES[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown device profile {name!r}; known: {sorted(PROFILES)}"
+        ) from None
+
+
+# ---------------------------------------------------------------------------
+# Cohort spec — plan + tiers + per-tier quotas
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CohortSpec:
+    """A cohort plan plus its device-tier composition.
+
+    With no ``tiers`` the cohort is homogeneous under the server's OMC
+    config and the engine reproduces the reference loop's sampling exactly.
+    With tiers, the population is partitioned round-robin (client ``i``
+    belongs to tier ``i % n_tiers``) and each round samples ``quotas[t]``
+    clients from tier ``t``'s population without replacement — every tier
+    is a static-shape segment of the single compiled round program.
+    """
+
+    plan: cohort_lib.CohortPlan
+    tiers: Tuple[DeviceProfile, ...] = ()
+    quotas: Optional[Tuple[int, ...]] = None  # default: even split
+    client_chunk: Optional[int] = None  # lax.map chunk; None -> pure vmap
+
+    def __post_init__(self):
+        if self.tiers:
+            n = len(self.tiers)
+            if self.quotas is None:
+                base, rem = divmod(self.plan.cohort_size, n)
+                object.__setattr__(
+                    self, "quotas",
+                    tuple(base + (1 if t < rem else 0) for t in range(n)),
+                )
+            if len(self.quotas) != n:
+                raise ValueError("quotas must have one entry per tier")
+            if sum(self.quotas) != self.plan.cohort_size:
+                raise ValueError(
+                    f"quotas {self.quotas} must sum to cohort_size "
+                    f"{self.plan.cohort_size}"
+                )
+            for t, q in enumerate(self.quotas):
+                pop = self.tier_population(t).shape[0]
+                if q > pop:
+                    raise ValueError(
+                        f"tier {t} quota {q} exceeds its population {pop}"
+                    )
+        elif self.quotas is not None:
+            raise ValueError("quotas given but no tiers")
+        for q in self.group_sizes:
+            # mirror the runtime gate: a segment is only chunked when it is
+            # larger than the chunk (smaller quotas run as pure vmap)
+            if self.client_chunk and q > self.client_chunk and (
+                q % self.client_chunk
+            ):
+                raise ValueError(
+                    f"client_chunk {self.client_chunk} must divide tier "
+                    f"quotas larger than it (got {q})"
+                )
+
+    @property
+    def n_tiers(self) -> int:
+        return max(len(self.tiers), 1)
+
+    @property
+    def is_hetero(self) -> bool:
+        return bool(self.tiers)
+
+    @property
+    def group_sizes(self) -> Tuple[int, ...]:
+        return self.quotas if self.is_hetero else (self.plan.cohort_size,)
+
+    def tier_population(self, t: int) -> np.ndarray:
+        return np.arange(t, self.plan.num_clients, self.n_tiers,
+                         dtype=np.int32)
+
+    def tier_omcs(self, base: OMCConfig) -> List[OMCConfig]:
+        tiers = self.tiers or (DeviceProfile(),)
+        return [p.resolve(base) for p in tiers]
+
+
+def sample_tiered_cohort(
+    key: jax.Array, spec: CohortSpec, round_index
+) -> List[jax.Array]:
+    """Per-tier int32 id arrays (concat order = survival-mask order).
+
+    Homogeneous specs defer to :func:`repro.federated.cohort.sample_cohort`
+    so the engine sees the identical cohort the reference loop would.
+    """
+    if not spec.is_hetero:
+        return [cohort_lib.sample_cohort(key, spec.plan, round_index)]
+    k = jax.random.fold_in(key, round_index)
+    out = []
+    for t, q in enumerate(spec.quotas):
+        pop = jnp.asarray(spec.tier_population(t))
+        perm = jax.random.permutation(
+            jax.random.fold_in(k, 0x7E0 + t), pop.shape[0]
+        )
+        out.append(pop[perm[:q]].astype(jnp.int32))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The compiled round: data gen + vmapped clients + aggregation + re-compress,
+# all tiers, one XLA program.
+# ---------------------------------------------------------------------------
+
+
+def _run_cohort(one, server_f32, batches, round_index, ids,
+                client_chunk: Optional[int]):
+    run = lambda b, c: one(server_f32, b, round_index, c)
+    if client_chunk and ids.shape[0] > client_chunk:
+        # scan of vmapped blocks: same results, bounded live memory
+        g = ids.shape[0] // client_chunk
+        bs = jax.tree_util.tree_map(
+            lambda x: x.reshape((g, client_chunk) + x.shape[1:]), batches
+        )
+        cs = ids.reshape(g, client_chunk)
+        models, losses = jax.lax.map(
+            lambda xs: jax.vmap(run)(*xs), (bs, cs)
+        )
+        models = jax.tree_util.tree_map(
+            lambda x: x.reshape((-1,) + x.shape[2:]), models
+        )
+        return models, losses.reshape(-1)
+    return jax.vmap(run)(batches, ids)
+
+
+def make_round_fn(
+    family,
+    cfg,
+    specs,
+    omc: OMCConfig,
+    sim: SimConfig,
+    spec: CohortSpec,
+    data_fn: Callable[[Any, Any, Any], Any],
+    data_mode: str = "vmap",
+):
+    """Build the engine's compiled round.
+
+    ``(storage, ids_per_tier, alive, round_index) ->
+    (new_storage, mean_loss, n_alive)`` — the whole round is ONE XLA
+    program: server decompress, per-tier data generation, the ``vmap``-ped
+    client updates, zero-weight FedAvg aggregation, the server
+    interpolation step, and the re-compress of the new state.  The
+    reference loop runs the identical ops eagerly at client granularity;
+    here nothing leaves the runtime between rounds, which is where the
+    order-of-magnitude throughput gap at large cohorts comes from
+    (``benchmarks/cohort_scale.py``).
+
+    ``data_mode="vmap"`` traces ``data_fn`` inside the program (it must be
+    a pure function of traced ``(client_id, round_index, step)`` — the
+    synthetic tasks and partitioned batch fns are); ``"host"`` takes
+    pre-stacked per-tier batches as an extra argument, for data sources
+    that cannot be traced (:func:`run_round_vectorized` stacks them).
+    """
+    if data_mode not in ("vmap", "host"):
+        raise ValueError(f"data_mode must be 'vmap' or 'host', got {data_mode!r}")
+    ones = [
+        simulate.make_client_fn(family, cfg, specs, omc_t, sim)
+        for omc_t in spec.tier_omcs(omc)
+    ]
+    steps = jnp.arange(sim.local_steps)
+
+    def finish(server_f32, stacked, loss_c, alive):
+        w = alive.astype(jnp.float32)
+        # The reference loop never computes dropped clients; the engine
+        # computes them and weights them 0.  0·x annihilates exactly for
+        # finite x, but a diverged dead client (non-finite update) would
+        # poison the mean as 0·inf = NaN — zero dead entries outright so
+        # the two paths stay equivalent even when clients blow up.
+        stacked = jax.tree_util.tree_map(
+            lambda x: jnp.where(
+                alive.reshape((-1,) + (1,) * (x.ndim - 1)), x, 0.0
+            ),
+            stacked,
+        )
+        loss_c = jnp.where(alive, loss_c, 0.0)
+        mean_model = cohort_lib.aggregate_weighted(stacked, w)
+        new_f32 = jax.tree_util.tree_map(
+            lambda old, new: old + sim.server_lr * (new - old),
+            server_f32, mean_model,
+        )
+        new_storage = (
+            compress_params(new_f32, specs, omc) if omc.enabled else new_f32
+        )
+        n_alive = w.sum()
+        loss = (loss_c * w).sum() / jnp.maximum(n_alive, 1.0)
+        return new_storage, loss, n_alive
+
+    if data_mode == "vmap":
+
+        @jax.jit
+        def round_fn(storage, ids_per_tier, alive, round_index):
+            server_f32 = decompress_tree(storage)
+            models, losses = [], []
+            for one, ids_t in zip(ones, ids_per_tier):
+                batches = jax.vmap(
+                    lambda c: jax.vmap(
+                        lambda s: data_fn(c, round_index, s)
+                    )(steps)
+                )(ids_t)
+                m, l = _run_cohort(one, server_f32, batches, round_index,
+                                   ids_t, spec.client_chunk)
+                models.append(m)
+                losses.append(l)
+            stacked = jax.tree_util.tree_map(
+                lambda *xs: jnp.concatenate(xs, 0), *models
+            )
+            return finish(server_f32, stacked, jnp.concatenate(losses), alive)
+
+        return round_fn
+
+    @jax.jit
+    def round_fn_host(storage, ids_per_tier, batches_per_tier, alive,
+                      round_index):
+        server_f32 = decompress_tree(storage)
+        models, losses = [], []
+        for one, ids_t, batches in zip(ones, ids_per_tier, batches_per_tier):
+            m, l = _run_cohort(one, server_f32, batches, round_index, ids_t,
+                               spec.client_chunk)
+            models.append(m)
+            losses.append(l)
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: jnp.concatenate(xs, 0), *models
+        )
+        return finish(server_f32, stacked, jnp.concatenate(losses), alive)
+
+    return round_fn_host
+
+
+def _host_batches(data_fn, ids_per_tier, round_index, local_steps):
+    out = []
+    for ids_t in ids_per_tier:
+        per_client = [
+            jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs),
+                *[data_fn(int(c), int(round_index), s)
+                  for s in range(local_steps)],
+            )
+            for c in np.asarray(ids_t)
+        ]
+        out.append(
+            jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *per_client)
+        )
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Rounds and training
+# ---------------------------------------------------------------------------
+
+
+def run_round_vectorized(
+    family,
+    cfg,
+    specs,
+    omc: OMCConfig,
+    sim: SimConfig,
+    server_params,  # storage tree (CompressedVariable | f32)
+    data_fn,
+    spec: CohortSpec,
+    round_index: int,
+    key: jax.Array,
+    round_fn=None,
+    wire_table: Optional[accounting.WireTable] = None,
+    data_mode: str = "vmap",
+) -> Tuple[Any, Dict[str, float]]:
+    """One vectorized round.  Returns (new server storage, metrics).
+
+    Semantics match :func:`repro.federated.simulate.run_round`: dead clients
+    contribute weight 0 to the FedAvg mean (numerically identical to
+    dropping them — zero-weight terms vanish exactly), the server
+    interpolates toward the cohort mean and re-compresses.  Pass a cached
+    ``round_fn`` (from :func:`make_round_fn`) when looping — building it
+    here costs a compile.
+    """
+    if round_fn is None:
+        round_fn = make_round_fn(family, cfg, specs, omc, sim, spec, data_fn,
+                                 data_mode)
+    ids_per_tier = sample_tiered_cohort(key, spec, round_index)
+    alive = cohort_lib.survival_mask(key, spec.plan, round_index)
+
+    if data_mode == "host":
+        batches = _host_batches(data_fn, ids_per_tier, round_index,
+                                sim.local_steps)
+        new_storage, loss, n_alive = round_fn(
+            server_params, ids_per_tier, batches, alive,
+            jnp.int32(round_index),
+        )
+    else:
+        new_storage, loss, n_alive = round_fn(
+            server_params, ids_per_tier, alive, jnp.int32(round_index)
+        )
+
+    n_alive = int(n_alive)
+    metrics: Dict[str, float] = dict(
+        loss=float(loss),
+        cohort=n_alive,
+        dropped=int(spec.plan.cohort_size - n_alive),
+    )
+    if wire_table is not None:
+        metrics.update(
+            round_wire_metrics(wire_table, omc, spec.tier_omcs(omc),
+                               ids_per_tier, alive, round_index)
+        )
+    return new_storage, metrics
+
+
+def round_wire_metrics(
+    table: accounting.WireTable,
+    omc: OMCConfig,
+    tier_omcs: Sequence[OMCConfig],
+    ids_per_tier: Sequence[jax.Array],
+    alive: jax.Array,
+    round_index,
+) -> Dict[str, int]:
+    """Exact per-round wire bytes: every invited client downloads the full
+    compressed server state; every *surviving* client uploads its
+    PPQ-masked, tier-format transport payload."""
+    invited = sum(int(np.asarray(i).shape[0]) for i in ids_per_tier)
+    down = table.download_bytes(omc) * invited
+    alive_np = np.asarray(alive, bool)
+    up = 0
+    off = 0
+    for omc_t, ids_t in zip(tier_omcs, ids_per_tier):
+        q = int(np.asarray(ids_t).shape[0])
+        per_client = accounting.cohort_upload_bytes(
+            table, omc_t, round_index, ids_t
+        )
+        up += int(per_client[alive_np[off:off + q]].sum())
+        off += q
+    return dict(down_bytes=int(down), up_bytes=int(up))
+
+
+def run_training_vectorized(
+    family,
+    cfg,
+    omc: OMCConfig,
+    sim: SimConfig,
+    spec: CohortSpec,
+    data_fn,
+    init_key,
+    num_rounds: int,
+    eval_fn: Optional[Callable[[Any, int], float]] = None,
+    eval_every: int = 10,
+    init_params=None,
+    log: Optional[Callable[[str], None]] = None,
+    data_mode: str = "vmap",
+    wire: bool = True,
+):
+    """Vectorized mirror of :func:`repro.federated.simulate.run_training`.
+
+    The round program compiles once (round 0) and is reused; history rows
+    carry per-round ``down_bytes`` / ``up_bytes`` when ``wire=True``.
+    Unlike the loop mirror (which defaults to ``wire=False`` — scalar
+    accounting costs a host round-trip per client), the engine's batched
+    accounting is a few ms per round, so it is on by default; pass
+    ``wire=False`` for history rows schema-identical to the loop's default.
+    """
+    specs = family.param_specs(cfg)
+    params = family.init(init_key, cfg) if init_params is None else init_params
+    storage = compress_params(params, specs, omc) if omc.enabled else params
+    round_fn = make_round_fn(family, cfg, specs, omc, sim, spec, data_fn,
+                             data_mode)
+    table = accounting.build_wire_table(params, specs, omc) if wire else None
+    key = jax.random.fold_in(init_key, 0xC047)
+    history = []
+    for r in range(num_rounds):
+        storage, metrics = run_round_vectorized(
+            family, cfg, specs, omc, sim, storage, data_fn, spec, r, key,
+            round_fn=round_fn, wire_table=table, data_mode=data_mode,
+        )
+        if eval_fn is not None and (r + 1) % eval_every == 0:
+            metrics["eval"] = float(eval_fn(decompress_tree(storage), r))
+        history.append(dict(round=r, **metrics))
+        if log and ((r + 1) % eval_every == 0 or r == 0):
+            log(f"round {r + 1}/{num_rounds}: " +
+                ", ".join(f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+                          for k, v in metrics.items()))
+    return storage, history
+
+
+# ---------------------------------------------------------------------------
+# Codec reconciliation helper — what a client's upload actually serializes
+# ---------------------------------------------------------------------------
+
+
+def masked_upload_tree(trained_f32, specs, omc: OMCConfig, round_index,
+                       client_id):
+    """Storage tree of one client's transport payload: PPQ-selected
+    variables compressed under ``omc.fmt``, everything else f32.  Feeding it
+    to :func:`repro.api.codecs.encode_payload` / ``payload_bytes_report``
+    must reproduce :func:`repro.federated.accounting.client_upload_bytes`
+    exactly (asserted in ``tests/test_engine.py``)."""
+    if not omc.enabled:
+        return trained_f32
+    names = accounting.selected_names(trained_f32, specs, omc)
+    if not names:
+        return trained_f32
+    mask = np.asarray(
+        ppq_mask(omc.ppq_key(), round_index, client_id, len(names),
+                 omc.quantize_fraction),
+        bool,
+    )
+    index = {n: i for i, n in enumerate(names)}
+
+    def f(path, spec, leaf):
+        i = index.get(path_str(path))
+        if i is None or not mask[i]:
+            return leaf
+        return compress_variable(
+            leaf, omc.fmt, pvt=omc.pvt,
+            batch_axes=n_stack_axes(spec, leaf), fast=True,
+        )
+
+    return jax.tree_util.tree_map_with_path(
+        f, specs, trained_f32, is_leaf=lambda s: isinstance(s, ParamSpec)
+    )

@@ -18,8 +18,10 @@ One round (paper §1, TPU-native mapping per DESIGN.md §4):
 
 PPQ note: the lowered round quantizes every policy-selected variable
 (fraction = 1).  Per-client PPQ masks need per-client effective weights —
-exercised faithfully in simulation mode (repro.federated.simulate) and
-documented as a cohort-granularity deviation at >=10 B scale (DESIGN.md §6).
+exercised faithfully in simulation mode (repro.federated.simulate, one
+client at a time) and at scale by the vectorized cohort engine
+(repro.federated.engine, DESIGN.md §9); documented as a cohort-granularity
+deviation at >=10 B scale (DESIGN.md §6).
 """
 
 from __future__ import annotations

@@ -14,15 +14,20 @@ This is the numerics-reference path used by every paper-table benchmark:
   * the server aggregates the (decompressed) client models weighted by
     surviving-client example counts and re-compresses its state.
 
-The per-client loop is a Python loop (cohorts are small in the benchmarks);
-inside it everything is jitted.  Client failures / stragglers drop reports
-through :mod:`repro.federated.cohort`.
+The per-client loop is a Python loop; inside it everything is jitted.  That
+makes this module the *numerics reference*: easy to audit, client by client,
+against the paper.  For cohorts beyond a few dozen clients use
+:mod:`repro.federated.engine` — the vectorized path that ``vmap``s the very
+same single-client update (``make_client_fn``) over stacked client states
+and is equivalence-tested against this loop (DESIGN.md §9 documents the
+stacked-state layout, the tolerance contract, and when to use which path).
+Client failures / stragglers drop reports through
+:mod:`repro.federated.cohort`.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -34,22 +39,15 @@ from repro.core.policy import path_str
 from repro.core.store import decompress_tree, is_compressed
 from repro.models.common import IDENTITY_MAT, ParamSpec
 
+from . import accounting
 from . import cohort as cohort_lib
-from .state import compress_params, n_stack_axes, selected
+from .state import compress_params
 
 
 def _selected_names(params_f32, specs, omc: OMCConfig):
-    names = []
-
-    def f(path, spec, leaf):
-        if selected(omc, path_str(path), spec, leaf):
-            names.append(path_str(path))
-        return leaf
-
-    jax.tree_util.tree_map_with_path(
-        f, specs, params_f32, is_leaf=lambda s: isinstance(s, ParamSpec)
-    )
-    return names
+    # the canonical PPQ mask-index order — shared with the engine and the
+    # wire accounting so mask bits can never desynchronize between them
+    return accounting.selected_names(params_f32, specs, omc)
 
 
 def client_view(params_f32, specs, omc: OMCConfig, round_index, client_id):
@@ -81,10 +79,15 @@ class SimConfig:
     server_lr: float = 1.0
 
 
-def make_client_update(family, cfg, specs, omc: OMCConfig, sim: SimConfig):
-    """jitted: (server_f32, batch_stack, round, client_id) -> client model."""
+def make_client_fn(family, cfg, specs, omc: OMCConfig, sim: SimConfig):
+    """Un-jitted: (server_f32, batch_stack, round, client_id) -> client model.
 
-    @functools.partial(jax.jit, static_argnames=())
+    The single-client round body.  The reference loop jits it as-is
+    (:func:`make_client_update`); the vectorized engine ``vmap``s it over a
+    stacked cohort (:mod:`repro.federated.engine`) — one definition, two
+    execution strategies, which is what the engine's equivalence guarantee
+    rests on (DESIGN.md §9)."""
+
     def client_update(server_f32, batches, round_index, client_id):
         eff = client_view(server_f32, specs, omc, round_index, client_id)
 
@@ -105,6 +108,11 @@ def make_client_update(family, cfg, specs, omc: OMCConfig, sim: SimConfig):
     return client_update
 
 
+def make_client_update(family, cfg, specs, omc: OMCConfig, sim: SimConfig):
+    """jitted: (server_f32, batch_stack, round, client_id) -> client model."""
+    return jax.jit(make_client_fn(family, cfg, specs, omc, sim))
+
+
 def run_round(
     family,
     cfg,
@@ -117,8 +125,15 @@ def run_round(
     round_index: int,
     key: jax.Array,
     client_update=None,
+    wire_table=None,
 ) -> Tuple[Any, Dict[str, float]]:
-    """One faithful federated round.  Returns (new server storage, metrics)."""
+    """One faithful federated round.  Returns (new server storage, metrics).
+
+    ``wire_table`` (an :class:`repro.federated.accounting.WireTable`) adds
+    exact per-round ``down_bytes`` / ``up_bytes`` to the metrics, computed
+    one scalar PPQ mask at a time — the loop-granularity counterpart of the
+    engine's batched accounting, asserted byte-identical in the engine
+    equivalence tests."""
     server_f32 = decompress_tree(server_params)
     ids = cohort_lib.sample_cohort(key, plan, round_index)
     alive = cohort_lib.survival_mask(key, plan, round_index)
@@ -126,6 +141,7 @@ def run_round(
         client_update = make_client_update(family, cfg, specs, omc, sim)
 
     models, weights, losses = [], [], []
+    up_bytes = 0
     for j in range(plan.cohort_size):
         cid = int(ids[j])
         if not bool(alive[j]):
@@ -139,6 +155,10 @@ def run_round(
         models.append(m)
         weights.append(1.0)
         losses.append(float(l))
+        if wire_table is not None:
+            up_bytes += accounting.client_upload_bytes(
+                wire_table, omc, round_index, cid
+            )
 
     w = jnp.asarray(weights, jnp.float32)
     stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *models)
@@ -153,6 +173,11 @@ def run_round(
         cohort=len(models),
         dropped=int(plan.cohort_size - len(models)),
     )
+    if wire_table is not None:
+        metrics["down_bytes"] = (
+            wire_table.download_bytes(omc) * plan.cohort_size
+        )
+        metrics["up_bytes"] = int(up_bytes)
     return new_storage, metrics
 
 
@@ -163,18 +188,23 @@ def run_training(
     eval_every: int = 10,
     init_params=None,
     log: Optional[Callable[[str], None]] = None,
+    wire: bool = False,
 ):
-    """Full simulation loop.  Returns (final storage params, history)."""
+    """Full simulation loop.  Returns (final storage params, history).
+
+    ``wire=True`` adds exact per-round wire-byte accounting to the history
+    rows (see :func:`run_round`)."""
     specs = family.param_specs(cfg)
     params = family.init(init_key, cfg) if init_params is None else init_params
     storage = compress_params(params, specs, omc) if omc.enabled else params
     client_update = make_client_update(family, cfg, specs, omc, sim)
+    wire_table = accounting.build_wire_table(params, specs, omc) if wire else None
     key = jax.random.fold_in(init_key, 0xC047)
     history = []
     for r in range(num_rounds):
         storage, metrics = run_round(
             family, cfg, specs, omc, sim, storage, data_fn, plan, r, key,
-            client_update=client_update,
+            client_update=client_update, wire_table=wire_table,
         )
         if eval_fn is not None and (r + 1) % eval_every == 0:
             metrics["eval"] = float(eval_fn(decompress_tree(storage), r))

@@ -1,0 +1,220 @@
+"""Vectorized engine vs reference loop: equivalence + wire accounting.
+
+The contract under test (DESIGN.md §9): with a single default tier the
+engine consumes the identical cohort sample, survival mask, PPQ masks, and
+data stream as the per-client reference loop; aggregated server trees agree
+within batched-op reassociation tolerance (at most ~one quantization step on
+boundary elements, tiny mean drift) and wire-byte accounting agrees to the
+byte — the loop computes it one scalar mask at a time, the engine in one
+batched pass, and both must reconcile exactly with the wire codec.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import codecs
+from repro.core.omc import OMCConfig
+from repro.core.store import decompress_tree
+from repro.data.partition import (
+    DirichletPartition,
+    DomainPartition,
+    IIDPartition,
+    make_partitioned_batch_fn,
+)
+from repro.data.synthetic import make_frame_task
+from repro.federated import accounting, engine, simulate
+from repro.federated.cohort import CohortPlan
+from repro.federated.state import compress_params
+from repro.models import conformer as cf
+
+CFG = cf.ConformerConfig(
+    n_layers=2, d_model=32, n_heads=4, d_ff=64, n_classes=16, d_in=8
+)
+OMC = OMCConfig.parse("S1E3M7")  # PPQ on: default quantize_fraction = 0.9
+PLAN = CohortPlan(num_clients=16, cohort_size=8, failure_rate=0.25)
+TASK = make_frame_task(d_in=CFG.d_in, n_classes=CFG.n_classes, seq_len=24,
+                       num_clients=PLAN.num_clients)
+DATA_FN = lambda c, r, s: TASK.batch(c, r, s, 4)
+
+
+def _train_both(num_rounds=2, local_steps=2):
+    sim = simulate.SimConfig(local_steps=local_steps, client_lr=0.1)
+    key = jax.random.PRNGKey(0)
+    ref_storage, ref_hist = simulate.run_training(
+        cf, CFG, OMC, sim, PLAN, DATA_FN, key, num_rounds=num_rounds,
+        eval_every=100, wire=True,
+    )
+    eng_storage, eng_hist = engine.run_training_vectorized(
+        cf, CFG, OMC, sim, engine.CohortSpec(PLAN), DATA_FN, key,
+        num_rounds=num_rounds, eval_every=100,
+    )
+    return ref_storage, ref_hist, eng_storage, eng_hist
+
+
+def test_engine_matches_reference_loop():
+    """Same seed, cohort of 8 with failures + PPQ: aggregated server trees
+    within tolerance, wire-byte accounting exactly equal (ISSUE 3)."""
+    ref_storage, ref_hist, eng_storage, eng_hist = _train_both()
+
+    for rh, eh in zip(ref_hist, eng_hist):
+        # identical cohort semantics: same survivors, same drop count
+        assert rh["cohort"] == eh["cohort"]
+        assert rh["dropped"] == eh["dropped"]
+        # wire accounting is byte-exact between the scalar and batched paths
+        assert rh["down_bytes"] == eh["down_bytes"]
+        assert rh["up_bytes"] == eh["up_bytes"]
+        assert abs(rh["loss"] - eh["loss"]) < 1e-3
+
+    ref = decompress_tree(ref_storage)
+    eng = decompress_tree(eng_storage)
+    for a, b in zip(jax.tree_util.tree_leaves(ref),
+                    jax.tree_util.tree_leaves(eng)):
+        d = np.abs(np.asarray(a) - np.asarray(b))
+        # boundary elements may round to the adjacent S1E3M7 code (one
+        # quantization step, ~0.8% relative); the bulk must be identical
+        assert d.max() <= 6e-3, d.max()
+        assert d.mean() <= 1e-4, d.mean()
+
+
+def test_download_accounting_reconciles_with_codec():
+    params = cf.init(jax.random.PRNGKey(0), CFG)
+    specs = cf.param_specs(CFG)
+    table = accounting.build_wire_table(params, specs, OMC)
+    storage = compress_params(params, specs, OMC)
+    rep = codecs.payload_bytes_report(storage)
+    assert table.download_bytes(OMC) == rep["wire_bytes"]
+    assert table.fp32_total == rep["fp32_bytes"]
+    # the serialized full payload's body is exactly the reported wire bytes
+    info = codecs.peek_payload(codecs.encode_payload(storage))
+    assert info.body_bytes == rep["wire_bytes"]
+
+
+def test_upload_accounting_reconciles_with_codec():
+    """A client's PPQ-masked transport payload serializes to exactly the
+    bytes the accounting table predicts (round, client arbitrary)."""
+    params = cf.init(jax.random.PRNGKey(1), CFG)
+    specs = cf.param_specs(CFG)
+    table = accounting.build_wire_table(params, specs, OMC)
+    for rnd, cid in [(0, 3), (5, 11)]:
+        tree = engine.masked_upload_tree(params, specs, OMC, rnd, cid)
+        predicted = accounting.client_upload_bytes(table, OMC, rnd, cid)
+        assert codecs.payload_bytes_report(tree)["wire_bytes"] == predicted
+        info = codecs.peek_payload(codecs.encode_payload(tree))
+        assert info.body_bytes == predicted
+    # PPQ actually bites: masked uploads sit strictly between all-quantized
+    # and all-f32
+    assert table.download_bytes(OMC) < predicted < table.fp32_total
+
+
+def test_batched_upload_accounting_matches_scalar():
+    params = cf.init(jax.random.PRNGKey(0), CFG)
+    table = accounting.build_wire_table(params, cf.param_specs(CFG), OMC)
+    ids = jnp.asarray([0, 3, 7, 12], jnp.int32)
+    batched = accounting.cohort_upload_bytes(table, OMC, 4, ids)
+    scalar = [accounting.client_upload_bytes(table, OMC, 4, int(c))
+              for c in ids]
+    np.testing.assert_array_equal(batched, scalar)
+
+
+def test_hetero_tiers_round():
+    plan = CohortPlan(num_clients=24, cohort_size=6)
+    spec = engine.CohortSpec(
+        plan,
+        tiers=(engine.profile("s1e3m7"), engine.profile("s1e4m3"),
+               engine.profile("f32")),
+        quotas=(3, 2, 1),
+    )
+    sim = simulate.SimConfig(local_steps=1, client_lr=0.1)
+    specs = cf.param_specs(CFG)
+    params = cf.init(jax.random.PRNGKey(0), CFG)
+    storage = compress_params(params, specs, OMC)
+    table = accounting.build_wire_table(params, specs, OMC)
+    key = jax.random.PRNGKey(2)
+
+    ids = engine.sample_tiered_cohort(key, spec, 0)
+    # stratified sampling: tier t draws only from its own (round-robin)
+    # population, and quotas are honored with static shapes
+    for t, ids_t in enumerate(ids):
+        assert ids_t.shape == (spec.quotas[t],)
+        assert bool((ids_t % 3 == t).all())
+
+    new_storage, m = engine.run_round_vectorized(
+        cf, CFG, specs, OMC, sim, storage, DATA_FN, spec, 0, key,
+        wire_table=table,
+    )
+    assert m["cohort"] >= 1
+    assert m["down_bytes"] == table.download_bytes(OMC) * plan.cohort_size
+    # the f32 tier uploads uncompressed; quantized tiers upload less
+    f32_omc = engine.profile("f32").resolve(OMC)
+    assert not f32_omc.enabled
+    assert accounting.cohort_upload_bytes(table, f32_omc, 0, ids[2])[0] == (
+        table.fp32_total
+    )
+    tiny_omc = engine.profile("s1e4m3").resolve(OMC)
+    assert accounting.cohort_upload_bytes(table, tiny_omc, 0, ids[1]).max() < (
+        table.fp32_total
+    )
+
+
+def test_client_chunk_matches_full_vmap():
+    """lax.map over client chunks (the scan-of-vmapped-blocks memory mode)
+    reproduces the pure-vmap result."""
+    sim = simulate.SimConfig(local_steps=1, client_lr=0.1)
+    specs = cf.param_specs(CFG)
+    params = cf.init(jax.random.PRNGKey(0), CFG)
+    storage = compress_params(params, specs, OMC)
+    key = jax.random.PRNGKey(0)
+    out = {}
+    for chunk in (None, 4):
+        spec = engine.CohortSpec(PLAN, client_chunk=chunk)
+        new_storage, m = engine.run_round_vectorized(
+            cf, CFG, specs, OMC, sim, storage, DATA_FN, spec, 0, key,
+        )
+        out[chunk] = (decompress_tree(new_storage), m)
+    assert out[None][1] == pytest.approx(out[4][1], rel=1e-5)
+    for a, b in zip(jax.tree_util.tree_leaves(out[None][0]),
+                    jax.tree_util.tree_leaves(out[4][0])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=6e-3)
+
+
+def test_cohort_spec_validation():
+    plan = CohortPlan(num_clients=24, cohort_size=6)
+    tiers = (engine.profile("s1e3m7"), engine.profile("f32"))
+    with pytest.raises(ValueError):
+        engine.CohortSpec(plan, tiers=tiers, quotas=(3, 4))  # sum != 6
+    with pytest.raises(ValueError):
+        engine.CohortSpec(plan, quotas=(3, 3))  # quotas without tiers
+    with pytest.raises(ValueError):
+        engine.CohortSpec(plan, client_chunk=4)  # 4 does not divide 6
+    spec = engine.CohortSpec(plan, tiers=tiers)  # default even split
+    assert spec.quotas == (3, 3)
+
+
+def test_partitioners_vectorize_and_skew():
+    part = DirichletPartition(alpha=0.1)
+    fn = make_partitioned_batch_fn(TASK, part, batch_size=4, num_sources=8)
+    ids = jnp.asarray([0, 1, 2], jnp.int32)
+    batch = jax.vmap(lambda c: fn(c, 0, 0))(ids)  # engine's cohort axis
+    assert batch["frames"].shape == (3, 4, TASK.seq_len, TASK.d_in)
+    # vmapped generation is bit-identical to scalar generation
+    solo = fn(1, 0, 0)
+    np.testing.assert_array_equal(np.asarray(batch["frames"][1]),
+                                  np.asarray(solo["frames"]))
+    # non-IID: different clients draw from visibly different mixtures
+    a = np.asarray(batch["frames"][0]).mean(axis=(0, 1))
+    b = np.asarray(batch["frames"][2]).mean(axis=(0, 1))
+    assert np.abs(a - b).max() > 0.1
+    # IID partition: weights are uniform for every client
+    w = IIDPartition().source_weights(jax.random.PRNGKey(0), 5, 8)
+    np.testing.assert_allclose(np.asarray(w), 1 / 8)
+    # domain partition routes clients to different label probes
+    dom = DomainPartition(num_domains=2)
+    fn_d = make_partitioned_batch_fn(TASK, dom, batch_size=4)
+    b0, b1 = fn_d(0, 0, 0), fn_d(1, 0, 0)
+    assert int(dom.domain_of(0)) == 0 and int(dom.domain_of(1)) == 1
+    assert not np.array_equal(np.asarray(b0["labels"]),
+                              np.asarray(b1["labels"]))

@@ -64,6 +64,22 @@ def test_survival_mask_respects_report_goal():
     assert int(m.sum()) >= 1
 
 
+def test_survival_mask_total_failure_keeps_fastest():
+    """failure_rate=1.0: exactly one survivor per round — the fastest client
+    by raw latency, not a fixed index (regression: the fallback used to rank
+    the inf-masked latencies, which always elected client 0)."""
+    plan = CohortPlan(num_clients=32, cohort_size=8, failure_rate=1.0)
+    key = jax.random.PRNGKey(7)
+    survivors = []
+    for r in range(20):
+        m = survival_mask(key, plan, r)
+        assert int(m.sum()) == 1  # the docstring's ">= 1 survivor" guarantee
+        survivors.append(int(jnp.argmax(m)))
+    # the retried report comes from the fastest client, which varies with the
+    # per-round latency draw — a constant index means the fallback is broken
+    assert len(set(survivors)) > 1
+
+
 def test_aggregate_weighted_renormalizes():
     deltas = {"w": jnp.stack([jnp.ones((4,)), 3 * jnp.ones((4,)),
                               100 * jnp.ones((4,))])}
