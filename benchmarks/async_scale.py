@@ -1,0 +1,224 @@
+"""Async vs sync throughput under straggler traces (DESIGN.md §10).
+
+Compares the event-driven buffered runtime
+(:mod:`repro.federated.async_engine`) against the barrier-synchronous
+vectorized engine (:mod:`repro.federated.engine`) on the same population,
+model, data stream, and Pareto heavy-tail latency trace:
+
+  * **completed-client-updates per virtual second** — the sync engine's
+    round makespan is the *max* latency over the invited cohort (the
+    barrier); the async runtime keeps aggregating while stragglers are
+    still in flight.  This is the headline number: the acceptance gate
+    requires async >= 2x sync at cohort 64 under Pareto(alpha=1.5).
+  * **wall-clock per aggregate** — sync rounds and async flushes timed
+    *interleaved* (one of each per iteration, medians reported) so
+    shared-host CPU noise hits both paths equally; shows the async host
+    event loop + padded-vmap batching keeps the hot path compiled.
+  * **model-quality-per-wire-byte at a matched update budget** — both
+    paths run the same number of completed client updates (the same local
+    token budget); reported as loss drop per wire MB, where async wire
+    bytes come from the event-granular
+    :class:`repro.federated.accounting.AsyncWireStats` ledger.
+
+    PYTHONPATH=src python benchmarks/async_scale.py            # cohort 64
+    PYTHONPATH=src python benchmarks/async_scale.py --smoke    # CI-sized
+
+Emits ``experiments/bench/async_scale.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import jax
+import numpy as np
+
+try:
+    from .common import print_table, save_result
+except ImportError:  # run as a script: python benchmarks/async_scale.py
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from common import print_table, save_result
+
+from repro.core.omc import OMCConfig
+from repro.data.synthetic import make_frame_task
+from repro.federated import async_engine, engine, simulate, traces
+from repro.federated.cohort import CohortPlan
+from repro.models import conformer as cf
+
+CFG = cf.ConformerConfig(
+    n_layers=2, d_model=32, n_heads=4, d_ff=64, n_classes=16, d_in=8
+)
+
+
+def _median(xs):
+    xs = sorted(xs)
+    n = len(xs)
+    return xs[n // 2] if n % 2 else 0.5 * (xs[n // 2 - 1] + xs[n // 2])
+
+
+def bench(cohort: int, buffer_goal: int, rounds: int, batch: int, seq: int,
+          alpha: float, fmt: str, seed: int) -> dict:
+    """One comparison row: the whole population participates in both paths;
+    sync invites everyone each round, async buffers K uploads."""
+    omc = OMCConfig.parse(fmt)
+    sim = simulate.SimConfig(local_steps=1, client_lr=0.1)
+    task = make_frame_task(d_in=CFG.d_in, n_classes=CFG.n_classes,
+                           seq_len=seq, num_clients=cohort)
+    data_fn = lambda c, r, s: task.batch(c, r, s, batch)
+    plan = CohortPlan(num_clients=cohort, cohort_size=cohort)
+    spec = engine.CohortSpec(plan)
+    trace = traces.ParetoTrace(seed=seed, latency=1.0, alpha=alpha)
+    key = jax.random.PRNGKey(seed)
+    specs = cf.param_specs(CFG)
+    params = cf.init(key, CFG)
+    storage0 = engine.compress_params(params, specs, omc)
+    table = engine.accounting.build_wire_table(params, specs, omc)
+    rkey = jax.random.fold_in(key, 0xC047)
+    budget = cohort * rounds  # matched completed-client-update budget
+
+    # --- sync path: barrier rounds; virtual makespan = slowest client -----
+    round_fn = engine.make_round_fn(cf, CFG, specs, omc, sim, spec, data_fn)
+    runner = async_engine.AsyncRunner(
+        cf, CFG, omc, sim,
+        async_engine.AsyncConfig(buffer_goal=buffer_goal, decay=0.5),
+        trace, num_clients=cohort, data_fn=data_fn, init_key=key,
+    )
+    # warm-up (compile) both paths, untimed; the warm-up round trains from
+    # the initial model, so its loss is the init-quality baseline both
+    # paths' quality-per-byte deltas are measured against
+    _, warm = engine.run_round_vectorized(
+        cf, CFG, specs, omc, sim, storage0, data_fn, spec, 0, rkey,
+        round_fn=round_fn,
+    )
+    init_loss = float(warm["loss"])
+    runner.run_until(flushes=1)
+
+    sync_makespans = [
+        max(trace.round_latency(c, r, 0.0) for c in range(cohort))
+        for r in range(rounds)
+    ]
+    # interleaved wall timing: one sync round, one async flush, repeat
+    sync_t, flush_t = [], []
+    sync_storage = storage0
+    sync_metrics = None
+    r = 1
+    while r <= rounds or runner.completed < budget:
+        if r <= rounds:
+            t0 = time.perf_counter()
+            sync_storage, sync_metrics = engine.run_round_vectorized(
+                cf, CFG, specs, omc, sim, sync_storage, data_fn, spec, r,
+                rkey, round_fn=round_fn, wire_table=table,
+            )
+            sync_t.append(time.perf_counter() - t0)
+        if runner.completed < budget:
+            t0 = time.perf_counter()
+            runner.run_until(flushes=1)
+            flush_t.append(time.perf_counter() - t0)
+        r += 1
+
+    # --- virtual-time throughput (the barrier vs no-barrier story) --------
+    sync_vtime = float(np.sum(sync_makespans))
+    sync_ups = cohort * rounds / sync_vtime
+    async_vtime = runner.clock
+    async_ups = runner.completed / async_vtime
+    speedup = async_ups / sync_ups
+
+    # --- quality per wire byte at the matched update budget ---------------
+    sync_loss = float(sync_metrics["loss"])
+    sync_wire = (table.download_bytes(omc) * cohort * rounds
+                 + sum(  # all clients alive: full-cohort uploads per round;
+                     # timed rounds are 1..rounds (warm-up consumed index 0)
+                     # and PPQ upload masks are round-index-dependent
+                     int(engine.accounting.cohort_upload_bytes(
+                         table, omc, rr,
+                         np.arange(cohort, dtype=np.int32)).sum())
+                     for rr in range(1, rounds + 1)))
+    async_loss = runner.history[-1]["loss"]
+    async_wire = runner.stats.down_bytes + runner.stats.up_bytes
+    mb = 1024.0 * 1024.0
+
+    return dict(
+        cohort=cohort,
+        buffer_goal=buffer_goal,
+        alpha=alpha,
+        update_budget=budget,
+        sync_updates_per_vs=round(sync_ups, 4),
+        async_updates_per_vs=round(async_ups, 4),
+        vtime_speedup=round(speedup, 2),
+        sync_wall_s_per_round=round(_median(sync_t), 4),
+        async_wall_s_per_flush=round(_median(flush_t), 4),
+        sync_wall_updates_per_s=round(cohort / _median(sync_t), 2),
+        async_wall_updates_per_s=round(buffer_goal / _median(flush_t), 2),
+        init_loss=round(init_loss, 4),
+        sync_loss=round(sync_loss, 4),
+        async_loss=round(async_loss, 4),
+        sync_wire_mb=round(sync_wire / mb, 3),
+        async_wire_mb=round(async_wire / mb, 3),
+        sync_quality_per_mb=round((init_loss - sync_loss) / (sync_wire / mb), 5),
+        async_quality_per_mb=round(
+            (init_loss - async_loss) / (async_wire / mb), 5),
+        async_stale_frac=round(
+            runner.stats.stale_up_bytes / max(runner.stats.up_bytes, 1), 4),
+        peak_in_flight_mb=round(runner.stats.peak_in_flight_bytes / mb, 3),
+    )
+
+
+def run(cohort=64, buffer_goal=16, rounds=5, batch=1, seq=8, alpha=1.5,
+        fmt="S1E3M7", seed=0, smoke=False):
+    rounds = max(1, min(rounds, int(os.environ.get("BENCH_ROUNDS", rounds))))
+    row = bench(cohort, buffer_goal, rounds, batch, seq, alpha, fmt, seed)
+    print_table(
+        "Async vs sync under Pareto stragglers (virtual + wall clock)",
+        [row],
+        ["cohort", "buffer_goal", "sync_updates_per_vs",
+         "async_updates_per_vs", "vtime_speedup", "sync_wall_s_per_round",
+         "async_wall_s_per_flush", "async_stale_frac"],
+    )
+    print_table(
+        "Quality per wire byte at matched update budget",
+        [row],
+        ["update_budget", "init_loss", "sync_loss", "async_loss", "sync_wire_mb",
+         "async_wire_mb", "sync_quality_per_mb", "async_quality_per_mb"],
+    )
+    path = save_result("async_scale", dict(
+        smoke=smoke, fmt=fmt, rounds=rounds, batch=batch, seq_len=seq,
+        rows=[row],
+    ))
+    print(f"wrote {path}")
+    # acceptance gate: non-barrier aggregation must beat the straggler
+    # barrier by >= 2x in completed updates per virtual second
+    assert row["vtime_speedup"] >= 2.0, row
+    return [row]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized: cohort 8, buffer 4, 3 rounds")
+    ap.add_argument("--cohort", type=int, default=64)
+    ap.add_argument("--buffer", type=int, default=16)
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--seq", type=int, default=8)
+    ap.add_argument("--alpha", type=float, default=1.5,
+                    help="Pareto tail index (smaller = heavier stragglers)")
+    ap.add_argument("--fmt", default="S1E3M7")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    if args.smoke:
+        cohort, buffer_goal, rounds = 8, 4, args.rounds or 3
+    else:
+        cohort, buffer_goal = args.cohort, args.buffer
+        rounds = args.rounds or 5
+    run(cohort=cohort, buffer_goal=buffer_goal, rounds=rounds,
+        batch=args.batch, seq=args.seq, alpha=args.alpha, fmt=args.fmt,
+        seed=args.seed, smoke=args.smoke)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

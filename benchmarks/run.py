@@ -9,7 +9,7 @@ import time
 
 
 def main() -> None:
-    from . import (api_wire, cohort_scale, fig3_pvt_stability,
+    from . import (api_wire, async_scale, cohort_scale, fig3_pvt_stability,
                    fig4_ppq_vs_apq, kernels_micro, memory_measured,
                    roofline_report, table1_iid, table2_adaptation,
                    table3_noniid, table4_ablation)
@@ -26,6 +26,7 @@ def main() -> None:
         "roofline_report": roofline_report.run,
         "api_wire": api_wire.run,
         "cohort_scale": cohort_scale.run,
+        "async_scale": async_scale.run,
     }
     names = sys.argv[1:] or list(all_benches)
     for name in names:

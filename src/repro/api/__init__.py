@@ -29,4 +29,10 @@ from .codecs import (  # noqa: F401
     peek_payload,
     tree_digest,
 )
-from .session import FLClient, FLSession, RoundTicket, ServeSession  # noqa: F401
+from .session import (  # noqa: F401
+    AsyncTicket,
+    FLClient,
+    FLSession,
+    RoundTicket,
+    ServeSession,
+)

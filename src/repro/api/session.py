@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from repro.core.omc import OMCConfig
 from repro.core.store import decompress_tree
 from repro.federated import cohort as cohort_lib
+from repro.federated.async_engine import flush_weights
 from repro.federated.round import make_serve_fns
 from repro.federated.state import compress_params, state_bytes_report
 
@@ -61,6 +62,40 @@ class RoundTicket:
         else:
             blob = self.payload
         self.issued_bytes.append(len(blob))
+        return blob
+
+
+@dataclasses.dataclass
+class AsyncTicket:
+    """A version-stamped download handed to one checking-in client.
+
+    The async counterpart of :class:`RoundTicket` (DESIGN.md §10): instead
+    of a per-round cohort broadcast, each ticket belongs to exactly one
+    client and records the ``server_version`` whose state it carries — the
+    upload that eventually comes back is decoded against *that* version's
+    storage and its staleness is ``current_version - server_version``.
+    ``delta_payload`` (vs the version the client said it holds) is taken
+    only when the client's digest matches; the session folds the actually
+    issued bytes into traffic at ingestion.
+    """
+
+    client_id: int
+    server_version: int
+    payload: bytes  # full state at server_version
+    delta_payload: Optional[bytes] = None  # vs the client's held version
+    delta_base_digest: int = 0
+    issued_bytes: int = 0
+    took_delta: bool = False
+
+    def payload_for(self, *, held_digest: int = 0) -> bytes:
+        """Pick delta when the client verifiably holds the base, else full."""
+        if (self.delta_payload is not None
+                and held_digest == self.delta_base_digest):
+            blob = self.delta_payload
+            self.took_delta = True
+        else:
+            blob = self.payload
+        self.issued_bytes = len(blob)
         return blob
 
 
@@ -205,6 +240,136 @@ class FLSession:
         self._ticket = None
         self._reports = {}
         return metrics
+
+    # -- async (buffered, version-stamped) side -----------------------------
+
+    def enable_async(self, buffer_goal: int, *, decay: float = 0.0,
+                     decay_mode: str = "poly",
+                     delta_horizon: int = 4) -> None:
+        """Switch the session to the non-barrier protocol (DESIGN.md §10).
+
+        ``buffer_goal`` (K) — aggregate whenever K uploads accumulate —
+        passes the same validation gate as the sync report goal.  After
+        this, drive the session with :meth:`checkin` / :meth:`ingest_async`
+        instead of the begin/ingest/close round cycle; the server applies a
+        staleness-weighted FedBuff step at each flush and bumps
+        ``server_version``.  ``delta_horizon`` bounds how many past version
+        storages are kept as delta bases for returning clients (versions a
+        pending ticket still references are always kept — uploads decode
+        against their ticket's exact base).
+        """
+        cohort_lib.validate_report_goal(
+            buffer_goal,
+            self.plan.cohort_size if self.plan is not None else buffer_goal,
+            what="buffer_goal",
+        )
+        if self._ticket is not None:
+            raise RuntimeError("close the open sync round before enable_async")
+        self.async_cfg = dict(buffer_goal=int(buffer_goal), decay=float(decay),
+                              decay_mode=decay_mode,
+                              delta_horizon=int(delta_horizon))
+        self.server_version = 0
+        self._full_cache: Optional[Tuple[int, bytes]] = None
+        self._version_storages: Dict[int, Any] = {0: self.storage}
+        self._async_pending: Dict[int, AsyncTicket] = {}
+        self._async_buffer: List[Tuple[int, int, Any]] = []  # (cid, base, f32)
+        self.async_history: List[Dict[str, Any]] = []
+
+    def checkin(self, client_id: int,
+                held_version: Optional[int] = None) -> AsyncTicket:
+        """Issue one client a version-stamped download ticket.
+
+        The full payload always carries the *current* state; if the client
+        reports a ``held_version`` still in the delta window, a sparse
+        delta against that version's storage rides along (digest-verified
+        at the client, exactly like sync :class:`RoundTicket` routing).
+        """
+        if not hasattr(self, "async_cfg"):
+            raise RuntimeError("call enable_async() first")
+        if client_id in self._async_pending:
+            raise RuntimeError(f"client {client_id} already has an open ticket")
+        # the full payload is identical for every check-in under one server
+        # version — encode it once per version, not once per client
+        if self._full_cache is None or self._full_cache[0] != self.server_version:
+            self._full_cache = (self.server_version, codecs.encode_payload(
+                self.storage, round_index=self.server_version))
+        full = self._full_cache[1]
+        delta = None
+        digest = 0
+        base = (self._version_storages.get(held_version)
+                if held_version is not None else None)
+        if base is not None:
+            delta = codecs.encode_payload(self.storage, base=base,
+                                          round_index=self.server_version)
+            digest = codecs.header_base_digest(delta)
+        ticket = AsyncTicket(client_id, self.server_version, full, delta,
+                             delta_base_digest=digest)
+        self._async_pending[client_id] = ticket
+        return ticket
+
+    def ingest_async(self, client_id: int, blob: bytes) -> codecs.PayloadInfo:
+        """Accept one upload against its ticket's base version; flush at K.
+
+        The upload is decoded against the storage *at the ticket's version*
+        (kept alive until the upload lands), so a stale client's delta
+        still decodes exactly; its staleness is charged at aggregation
+        time through the session's decay weights.
+        """
+        ticket = self._async_pending.pop(client_id, None)
+        if ticket is None:
+            raise KeyError(f"client {client_id} has no open ticket")
+        base = self._version_storages[ticket.server_version]
+        tree, info = codecs.decode_payload(blob, base=base)
+        self._async_buffer.append(
+            (client_id, ticket.server_version, decompress_tree(tree))
+        )
+        self.traffic["up_bytes"] += info.total_bytes
+        self.traffic["up_fp32_bytes"] += self._fp32_bytes
+        self.traffic["down_bytes"] += ticket.issued_bytes
+        self.traffic["down_fp32_bytes"] += self._fp32_bytes
+        if len(self._async_buffer) >= self.async_cfg["buffer_goal"]:
+            self._flush_async()
+        return info
+
+    def _flush_async(self) -> None:
+        entries = self._async_buffer[: self.async_cfg["buffer_goal"]]
+        self._async_buffer = self._async_buffer[self.async_cfg["buffer_goal"]:]
+        staleness = jnp.asarray(
+            [self.server_version - base for _, base, _ in entries],
+            jnp.float32,
+        )
+        w = flush_weights(staleness, self.async_cfg["decay"],
+                          self.async_cfg["decay_mode"])
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *[m for _, _, m in entries]
+        )
+        mean_model = cohort_lib.aggregate_weighted(stacked, w)
+        server_f32 = decompress_tree(self.storage)
+        new_f32 = jax.tree_util.tree_map(
+            lambda old, new: old + self.server_lr * (new - old),
+            server_f32, mean_model,
+        )
+        self.storage = (
+            compress_params(new_f32, self.specs, self.omc)
+            if self.omc.enabled else new_f32
+        )
+        self.server_version += 1
+        self._version_storages[self.server_version] = self.storage
+        self._gc_version_storages()
+        self.async_history.append(dict(
+            version=self.server_version,
+            buffer=len(entries),
+            staleness_max=int(staleness.max()),
+            **{k: int(v) for k, v in self.traffic.items()},
+        ))
+
+    def _gc_version_storages(self) -> None:
+        keep = {t.server_version for t in self._async_pending.values()}
+        keep.add(self.server_version)
+        horizon = self.server_version - self.async_cfg["delta_horizon"]
+        for v in [v for v in self._version_storages
+                  if v not in keep and v < horizon]:
+            del self._version_storages[v]
 
 
 class FLClient:

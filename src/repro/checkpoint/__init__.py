@@ -1,8 +1,16 @@
-"""Atomic, reshardable checkpoints of federated server state."""
+"""Atomic, reshardable checkpoints of federated server state.
+
+Sync state goes through :func:`save_state` / :func:`restore_state`;
+the async runtime's full mid-buffer snapshot (server storage + buffer +
+version-stamped pending tickets) through :func:`save_async_state` /
+:func:`restore_async_state` (DESIGN.md §10).
+"""
 
 from .ckpt import (
     latest_checkpoint,
     restore_state,
+    restore_async_state,
     save_state,
+    save_async_state,
     gc_checkpoints,
 )

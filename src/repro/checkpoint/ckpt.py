@@ -119,6 +119,139 @@ def gc_checkpoints(ckpt_dir: str, keep: int) -> None:
             shutil.rmtree(os.path.join(ckpt_dir, name), ignore_errors=True)
 
 
+def _async_state_tree(runner) -> Any:
+    """The runner's array-bearing state as one pytree (DESIGN.md §10).
+
+    Buffer models, the per-version download storages pending tickets still
+    reference, and the lazily-trained-but-not-yet-uploaded cache all ride
+    along with the server storage, so a killed async run resumes *mid
+    buffer* with nothing retrained and nothing re-downloaded.
+    """
+    return dict(
+        storage=runner.storage,
+        buffer=[e.model for e in runner.buffer],
+        versions={str(v): s for v, s in sorted(runner.version_storages.items())},
+        trained={f"{v}|{c}": m
+                 for (v, c), (m, _) in sorted(runner.trained.items())},
+    )
+
+
+def save_async_state(ckpt_dir: str, runner, keep: int = 3) -> str:
+    """Checkpoint an :class:`repro.federated.async_engine.AsyncRunner`.
+
+    Array state goes through the same atomic npz+manifest path as
+    :func:`save_state`; the event-loop scalars (virtual clock, version,
+    pending version-stamped tickets, trace event counters, wire ledger)
+    travel in the manifest's ``extra`` — everything a deterministic resume
+    needs, since traces are pure functions of their checkpointed counters.
+    The step counter is ``events_processed`` (monotone across a run).
+    """
+    extra = dict(
+        kind="async_runner",
+        version=int(runner.version),
+        clock=float(runner.clock),
+        events_processed=int(runner.events_processed),
+        completed=int(runner.completed),
+        dropped_stale=int(runner.dropped_stale),
+        buffer_meta=[[int(e.client_id), int(e.base_version), float(e.loss)]
+                     for e in runner.buffer],
+        pending=[[int(c), int(p.base_version), int(p.round_index),
+                  float(p.upload_at)]
+                 for c, p in runner.pending.items()],
+        idle=[[int(c), float(t)] for c, t in runner.idle.items()],
+        version_keys=sorted(int(v) for v in runner.version_storages),
+        event_counters={str(c): int(k)
+                        for c, k in runner.event_counters.items()},
+        round_counters={str(c): int(k)
+                        for c, k in runner.round_counters.items()},
+        trained_losses={f"{v}|{c}": float(l)
+                        for (v, c), (_, l) in runner.trained.items()},
+        history=runner.history,
+        stats=(
+            dict(snapshot=runner.stats.snapshot(),
+                 pending={str(c): int(b)
+                          for c, b in runner.stats._pending.items()})
+            if runner.stats is not None else None
+        ),
+    )
+    return save_state(ckpt_dir, runner.events_processed,
+                      _async_state_tree(runner), keep=keep, extra=extra)
+
+
+def restore_async_state(path: str, runner) -> Dict[str, Any]:
+    """Restore a checkpoint from :func:`save_async_state` into ``runner``.
+
+    ``runner`` must be a freshly-constructed AsyncRunner with the same
+    family/config/trace/data — its storage provides the leaf templates;
+    every mutable field is then overwritten in place.  Returns the
+    manifest ``extra``.
+    """
+    with open(os.path.join(path, "manifest.json")) as f:
+        extra = json.load(f)["extra"]
+    if extra.get("kind") != "async_runner":
+        raise ValueError(f"not an async-runner checkpoint: {path}")
+    f32_t = _decompressed_template(runner.storage)
+    template = dict(
+        storage=runner.storage,
+        buffer=[f32_t] * len(extra["buffer_meta"]),
+        versions={str(v): runner.storage for v in extra["version_keys"]},
+        trained={k: f32_t for k in sorted(extra["trained_losses"])},
+    )
+    state, _ = restore_state(path, template)
+
+    from repro.federated.async_engine import _BufferEntry, _Pending
+
+    runner.storage = state["storage"]
+    runner.version = int(extra["version"])
+    runner.clock = float(extra["clock"])
+    runner.events_processed = int(extra["events_processed"])
+    runner.completed = int(extra["completed"])
+    runner.dropped_stale = int(extra["dropped_stale"])
+    runner.buffer = [
+        _BufferEntry(int(c), int(b), m, float(l))
+        for (c, b, l), m in zip(extra["buffer_meta"], state["buffer"])
+    ]
+    runner.pending = {
+        int(c): _Pending(int(b), int(r), float(t))
+        for c, b, r, t in extra["pending"]
+    }
+    runner.idle = {int(c): float(t) for c, t in extra["idle"]}
+    runner.event_counters = {
+        int(c): int(k) for c, k in extra["event_counters"].items()
+    }
+    runner.round_counters = {
+        int(c): int(k) for c, k in extra["round_counters"].items()
+    }
+    runner.version_storages = {
+        int(v): s for v, s in state["versions"].items()
+    }
+    runner.trained = {
+        (int(k.split("|")[0]), int(k.split("|")[1])):
+            (state["trained"][k], float(l))
+        for k, l in extra["trained_losses"].items()
+    }
+    runner.history = list(extra["history"])
+    if extra["stats"] is not None and runner.stats is not None:
+        snap = extra["stats"]["snapshot"]
+        for field in ("down_bytes", "up_bytes", "stale_up_bytes",
+                      "dropped_up_bytes", "in_flight_bytes",
+                      "peak_in_flight_bytes", "n_downloads", "n_uploads",
+                      "n_stale", "n_dropped"):
+            setattr(runner.stats, field, int(snap[field]))
+        runner.stats._pending = {
+            int(c): int(b) for c, b in extra["stats"]["pending"].items()
+        }
+    runner._rebuild_heap()
+    return extra
+
+
+def _decompressed_template(storage):
+    """f32 template tree matching a trained client model's structure."""
+    from repro.core.store import decompress_tree
+
+    return jax.eval_shape(decompress_tree, storage)
+
+
 def restore_state(path: str, template, shardings=None):
     """Restore into the structure of `template` (same treedef).
 

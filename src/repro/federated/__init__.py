@@ -1,9 +1,12 @@
 """Federated runtime: OMC materialization, jit-able rounds, simulation.
 
-Three execution paths for the paper's loop (DESIGN.md §9 has the guide):
+Four execution paths for the paper's loop (DESIGN.md §9/§10 have the guide):
   * :mod:`.simulate` — the per-client reference loop (numerics ground truth),
   * :mod:`.engine` — the vectorized heterogeneous-cohort engine (vmap/scan
     over stacked client states; production-scale cohorts),
+  * :mod:`.async_engine` — the event-driven non-barrier runtime (virtual
+    clock, :mod:`.traces` availability/latency models, buffered
+    staleness-weighted aggregation; straggler-dominated fleets),
   * :mod:`.round` — the jit-able distributed round (multi-pod lowering).
 """
 
@@ -12,6 +15,7 @@ from .state import TrainState, init_state, state_bytes_report
 from .round import make_round_fn, make_eval_fn
 from .cohort import CohortPlan, sample_cohort, survival_mask
 from .accounting import WireTable, build_wire_table
+from .cohort import validate_report_goal
 from .engine import (
     CohortSpec,
     DeviceProfile,
@@ -19,4 +23,19 @@ from .engine import (
     run_round_vectorized,
     run_training_vectorized,
     sample_tiered_cohort,
+)
+from .async_engine import (
+    AsyncConfig,
+    AsyncRunner,
+    buffer_weights,
+    flush_weights,
+    run_async_training,
+    staleness_weights,
+)
+from .traces import (
+    ClientTrace,
+    DiurnalTrace,
+    FixedTrace,
+    ParetoTrace,
+    TieredTrace,
 )

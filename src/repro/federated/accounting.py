@@ -149,6 +149,86 @@ def client_upload_bytes(
     return table.upload_bytes(mask, omc)
 
 
+@dataclasses.dataclass
+class AsyncWireStats:
+    """Wire-byte ledger for the non-barrier runtime (DESIGN.md §10).
+
+    The sync paths account per round: a round's bytes are known the moment
+    it closes.  The async runtime has no rounds — downloads and uploads
+    interleave across server versions — so this ledger tracks bytes at
+    event granularity and splits uploads by *staleness*: an upload whose
+    base version is behind the server at arrival still costs full wire
+    bytes but carries a decayed weight (``stale_up_bytes``), and one past
+    ``max_staleness`` is pure waste (``dropped_up_bytes``).  ``in_flight``
+    is the byte volume of started-but-unfinished client rounds (download
+    issued + the upload it commits to), whose peak bounds the transport
+    buffering a deployment must provision.
+
+    Sizes come from the same :class:`WireTable` rows as the sync paths, so
+    async totals reconcile byte-exactly with
+    :func:`repro.api.codecs.payload_bytes_report` (tested in
+    ``tests/test_async_engine.py``).
+    """
+
+    table: WireTable
+    down_bytes: int = 0
+    up_bytes: int = 0  # arrived fresh (staleness == 0), counted in up_bytes
+    stale_up_bytes: int = 0  # arrived with staleness > 0 (subset of up_bytes)
+    dropped_up_bytes: int = 0  # discarded past max_staleness (NOT in up_bytes)
+    in_flight_bytes: int = 0
+    peak_in_flight_bytes: int = 0
+    n_downloads: int = 0
+    n_uploads: int = 0
+    n_stale: int = 0
+    n_dropped: int = 0
+    _pending: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    def start_round(self, omc: OMCConfig, round_index: int,
+                    client_id: int) -> None:
+        """Client checked in: full download now, upload bytes committed.
+
+        ``round_index`` is the client's own round counter (it keys the
+        PPQ/transport mask), not the server version."""
+        down = self.table.download_bytes(omc)
+        up = client_upload_bytes(self.table, omc, round_index, client_id)
+        self.down_bytes += down
+        self.n_downloads += 1
+        self._pending[client_id] = down + up
+        self.in_flight_bytes += down + up
+        self.peak_in_flight_bytes = max(self.peak_in_flight_bytes,
+                                        self.in_flight_bytes)
+
+    def finish_round(self, omc: OMCConfig, round_index: int, client_id: int,
+                     staleness: int, dropped: bool = False) -> int:
+        """Client's upload arrived; returns its wire bytes."""
+        up = client_upload_bytes(self.table, omc, round_index, client_id)
+        self.in_flight_bytes -= self._pending.pop(client_id)
+        if dropped:
+            self.dropped_up_bytes += up
+            self.n_dropped += 1
+            return up
+        self.up_bytes += up
+        self.n_uploads += 1
+        if staleness > 0:
+            self.stale_up_bytes += up
+            self.n_stale += 1
+        return up
+
+    def snapshot(self) -> dict:
+        return dict(
+            down_bytes=int(self.down_bytes),
+            up_bytes=int(self.up_bytes),
+            stale_up_bytes=int(self.stale_up_bytes),
+            dropped_up_bytes=int(self.dropped_up_bytes),
+            in_flight_bytes=int(self.in_flight_bytes),
+            peak_in_flight_bytes=int(self.peak_in_flight_bytes),
+            n_downloads=int(self.n_downloads),
+            n_uploads=int(self.n_uploads),
+            n_stale=int(self.n_stale),
+            n_dropped=int(self.n_dropped),
+        )
+
+
 def cohort_upload_bytes(
     table: WireTable, omc: OMCConfig, round_index, client_ids
 ) -> np.ndarray:

@@ -1,0 +1,527 @@
+"""Event-driven asynchronous federated runtime (DESIGN.md §10).
+
+Both sync execution paths (:mod:`repro.federated.simulate`,
+:mod:`repro.federated.engine`) are hard-barrier: every round waits for the
+slowest invited client, so one heavy-tail straggler caps the whole fleet's
+throughput.  This module removes the barrier.  Clients *check in* against a
+virtual clock driven by a pluggable :mod:`repro.federated.traces` model,
+download the server state stamped with its current **version**, train
+locally, and upload whenever they finish; the server runs **buffered
+aggregation** (FedBuff-style): an aggregate is applied whenever
+``buffer_goal`` (K) uploads accumulate, each weighted by a configurable
+decay of its **staleness** ``server_version - base_version``.  Nothing ever
+blocks on a straggler — its update simply lands in a later buffer with a
+smaller weight.
+
+The hot path stays compiled: clients that checked in under the same server
+version downloaded the *same* state, so their local training batches
+through the existing vmapped single-client body
+(:func:`repro.federated.simulate.make_client_fn` — the very body the sync
+engine vmaps) in one fixed-capacity XLA program per buffer flush; the flush
+itself (staleness-weighted aggregate + server step + re-compress) is a
+second compiled program.  The event loop only moves virtual time and
+Python-level bookkeeping.
+
+Equivalence contract (DESIGN.md §10, tested in
+``tests/test_async_engine.py``): with ``buffer_goal == cohort size``, a
+zero-jitter :class:`~repro.federated.traces.FixedTrace`, and staleness
+decay disabled, every version's buffer holds exactly one fresh update per
+client, and the runtime reproduces the sync engine's server tree within
+the documented one-quantization-step tolerance, with wire bytes
+reconciling byte-exactly.
+
+Checkpoint/resume of the full runtime state (buffer, version storages,
+pending tickets, trace counters) lives in
+:func:`repro.checkpoint.save_async_state` /
+:func:`repro.checkpoint.restore_async_state`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.omc import OMCConfig
+from repro.core.store import decompress_tree
+
+from . import accounting
+from . import cohort as cohort_lib
+from . import simulate
+from .simulate import SimConfig
+from .state import compress_params
+from .traces import ClientTrace, FixedTrace
+
+_PRIO_UPLOAD = 0  # at equal times, uploads (and their flush) land first
+_PRIO_CHECKIN = 1
+
+
+# ---------------------------------------------------------------------------
+# Staleness weighting
+# ---------------------------------------------------------------------------
+
+
+def staleness_weights(staleness, decay: float, mode: str = "poly"):
+    """Un-normalized buffer weights ``w(s)`` for staleness ``s >= 0``.
+
+    ``poly``: ``(1 + s)^-decay`` (FedBuff/FedAsync polynomial decay);
+    ``exp``: ``e^(-decay * s)``.  Both satisfy the weight contract
+    (DESIGN.md §10): ``w(0) = 1``, ``0 < w(s) <= 1``, monotone
+    non-increasing in ``s``.  ``decay = 0`` disables staleness weighting —
+    every update weighs 1 and buffered aggregation reduces exactly to the
+    sync engine's zero-weight FedAvg.
+    """
+    s = jnp.asarray(staleness, jnp.float32)
+    if decay < 0:
+        raise ValueError(f"decay must be >= 0, got {decay}")
+    if mode not in ("poly", "exp"):
+        raise ValueError(f"decay_mode must be 'poly' or 'exp', got {mode!r}")
+    if decay == 0:
+        return jnp.ones_like(s)
+    if mode == "poly":
+        return (1.0 + s) ** (-decay)
+    return jnp.exp(-decay * s)
+
+
+def buffer_weights(staleness, decay: float, mode: str = "poly"):
+    """Normalized per-buffer weights (non-negative, sum to 1).
+
+    Computed in log space shifted by the freshest entry (the softmax
+    trick): mathematically ``w(s_i) / sum_j w(s_j)``, but immune to the
+    raw-weight underflow a uniformly-stale buffer hits at large
+    ``decay * staleness`` (``exp(-200) == 0`` in f32 — raw normalization
+    would be 0/0).
+    """
+    w = staleness_weights(staleness, decay, mode)  # validates args
+    s = jnp.asarray(staleness, jnp.float32)
+    if decay == 0:
+        return w / w.sum()
+    logw = -decay * (jnp.log1p(s) if mode == "poly" else s)
+    logw = logw - logw.max()
+    e = jnp.exp(logw)
+    return e / e.sum()
+
+
+def flush_weights(staleness, decay: float, mode: str = "poly"):
+    """Weights a buffer flush hands to ``aggregate_weighted``.
+
+    ``decay == 0`` returns exact 1.0s — bit-for-bit the sync engine's
+    all-alive FedAvg weights (the equivalence gate rests on this);
+    otherwise the stable normalized weights (``aggregate_weighted``
+    renormalizes, so the scale difference is immaterial).
+    """
+    s = jnp.asarray(staleness, jnp.float32)
+    if decay == 0:
+        staleness_weights(s, decay, mode)  # still validate mode
+        return jnp.ones_like(s)
+    return buffer_weights(s, decay, mode)
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncConfig:
+    """Buffered-aggregation knobs.
+
+    ``buffer_goal`` (K) is validated against the participating population
+    with the same gate as the sync report goal
+    (:func:`repro.federated.cohort.validate_report_goal`) at runner
+    construction.  ``train_capacity`` is the padded vmap width of the
+    compiled training program (default: K — one program per flush in the
+    steady state); groups larger than it run in multiple calls of the same
+    program, never a recompile.
+    """
+
+    buffer_goal: int
+    decay: float = 0.0
+    decay_mode: str = "poly"
+    max_staleness: Optional[int] = None  # drop (don't aggregate) staler
+    train_capacity: Optional[int] = None
+
+    def __post_init__(self):
+        staleness_weights(jnp.zeros((1,)), self.decay, self.decay_mode)
+        if self.max_staleness is not None and self.max_staleness < 0:
+            raise ValueError(
+                f"max_staleness must be >= 0, got {self.max_staleness}"
+            )
+        if self.train_capacity is not None and self.train_capacity < 1:
+            raise ValueError(
+                f"train_capacity must be >= 1, got {self.train_capacity}"
+            )
+
+    @property
+    def capacity(self) -> int:
+        return self.train_capacity or self.buffer_goal
+
+
+# ---------------------------------------------------------------------------
+# Compiled pieces: batched client training + the buffer flush
+# ---------------------------------------------------------------------------
+
+
+def make_batch_train_fn(family, cfg, specs, omc: OMCConfig, sim: SimConfig,
+                        data_fn, capacity: int):
+    """Jitted ``(storage, cids[cap], rounds[cap]) -> (models, losses)``.
+
+    The same single-client body the sync engine vmaps, over a *padded*
+    fixed-width client axis: every check-in epoch trains through this one
+    program regardless of how many clients shared the version (pad slots
+    repeat a real client and are discarded host-side).  ``rounds`` is each
+    client's own round counter — NOT the server version: a fast client
+    running twice under one version must draw fresh data and a fresh PPQ
+    mask both times (under the degenerate equivalence trace the two
+    coincide).  ``data_fn`` is traced inside (synthetic tasks and
+    partitioned batch fns are traceable pure functions of
+    ``(client_id, round_index, step)``).
+    """
+    one = simulate.make_client_fn(family, cfg, specs, omc, sim)
+    steps = jnp.arange(sim.local_steps)
+
+    @jax.jit
+    def batch_fn(storage, cids, rounds):
+        server_f32 = decompress_tree(storage)
+        batches = jax.vmap(
+            lambda c, r: jax.vmap(lambda s: data_fn(c, r, s))(steps)
+        )(cids, rounds)
+        return jax.vmap(
+            lambda b, r, c: one(server_f32, b, r, c)
+        )(batches, rounds, cids)
+
+    return batch_fn
+
+
+def make_flush_fn(specs, omc: OMCConfig, sim: SimConfig, buffer_goal: int):
+    """Jitted ``(storage, stacked[K,...], weights[K]) -> new storage``.
+
+    Staleness-weighted FedBuff step: weighted mean over the buffer
+    (renormalized — :func:`repro.federated.cohort.aggregate_weighted`, the
+    same aggregation op as both sync paths), server interpolation with
+    ``sim.server_lr``, re-compress.  With unit weights this is bit-for-bit
+    the sync engine's ``finish`` on an all-alive cohort of size K.
+    """
+    del buffer_goal  # shape is carried by the traced arguments
+
+    @jax.jit
+    def flush_fn(storage, stacked, weights):
+        server_f32 = decompress_tree(storage)
+        mean_model = cohort_lib.aggregate_weighted(stacked, weights)
+        new_f32 = jax.tree_util.tree_map(
+            lambda old, new: old + sim.server_lr * (new - old),
+            server_f32, mean_model,
+        )
+        return compress_params(new_f32, specs, omc) if omc.enabled else new_f32
+
+    return flush_fn
+
+
+# ---------------------------------------------------------------------------
+# The runtime
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _Pending:
+    """An in-flight client round: version-stamped ticket + upload time.
+
+    ``round_index`` is the client's own round counter — it keys the data
+    stream and the PPQ/transport mask, while ``base_version`` keys the
+    downloaded state and the staleness computation.
+    """
+
+    base_version: int
+    round_index: int
+    upload_at: float
+
+
+@dataclasses.dataclass
+class _BufferEntry:
+    client_id: int
+    base_version: int
+    model: Any  # trained client model (f32 tree)
+    loss: float
+
+
+class AsyncRunner:
+    """The event-driven server: virtual clock, tickets, buffer, flushes.
+
+    Drive it with :meth:`step` (one event), :meth:`run_until` (a
+    condition), or the :func:`run_async_training` convenience.  All
+    mutable state is exposed as plain attributes so
+    :mod:`repro.checkpoint` can serialize a mid-buffer snapshot and
+    :func:`~repro.checkpoint.restore_async_state` can resume it
+    deterministically (traces are counter-based; see
+    :mod:`repro.federated.traces`).
+    """
+
+    def __init__(
+        self,
+        family,
+        cfg,
+        omc: OMCConfig,
+        sim: SimConfig,
+        acfg: AsyncConfig,
+        trace: Optional[ClientTrace] = None,
+        *,
+        num_clients: int,
+        data_fn: Callable[[Any, Any, Any], Any],
+        init_key=None,
+        init_params=None,
+        wire: bool = True,
+    ):
+        if init_key is None and init_params is None:
+            raise ValueError("need init_key or init_params")
+        cohort_lib.validate_report_goal(acfg.buffer_goal, num_clients,
+                                        what="buffer_goal")
+        self.family, self.cfg, self.omc, self.sim = family, cfg, omc, sim
+        self.acfg = acfg
+        self.trace = trace if trace is not None else FixedTrace()
+        self.num_clients = int(num_clients)
+        self.specs = family.param_specs(cfg)
+        params = (family.init(init_key, cfg) if init_params is None
+                  else init_params)
+        self.storage = (
+            compress_params(params, self.specs, omc) if omc.enabled else params
+        )
+        self._batch_fn = make_batch_train_fn(
+            family, cfg, self.specs, omc, sim, data_fn, acfg.capacity
+        )
+        self._flush_fn = make_flush_fn(self.specs, omc, sim, acfg.buffer_goal)
+        self.stats = (
+            accounting.AsyncWireStats(
+                accounting.build_wire_table(params, self.specs, omc)
+            ) if wire else None
+        )
+
+        # --- mutable runtime state (checkpointed as a unit) ---------------
+        self.version = 0
+        self.clock = 0.0
+        self.events_processed = 0
+        self.completed = 0  # uploads aggregated into some buffer
+        self.dropped_stale = 0
+        self.buffer: List[_BufferEntry] = []
+        self.pending: Dict[int, _Pending] = {}  # cid -> in-flight round
+        self.idle: Dict[int, float] = {  # cid -> next check-in time
+            c: self.trace.first_checkin(c) for c in range(self.num_clients)
+        }
+        self.event_counters: Dict[int, int] = {
+            c: 0 for c in range(self.num_clients)
+        }
+        self.round_counters: Dict[int, int] = {  # cid -> rounds started
+            c: 0 for c in range(self.num_clients)
+        }
+        self.version_storages: Dict[int, Any] = {}  # v -> storage at v
+        self.trained: Dict[Tuple[int, int], Tuple[Any, float]] = {}
+        self.history: List[Dict[str, Any]] = []
+        self._rebuild_heap()
+
+    # -- event loop ---------------------------------------------------------
+
+    def _rebuild_heap(self) -> None:
+        """(Re)build the event heap from ``pending`` + ``idle`` — the dicts
+        are the source of truth (checkpointed; heap entries are lazily
+        invalidated against them), so a restored runner re-derives the
+        identical schedule."""
+        self._heap: List[Tuple[float, int, int]] = [
+            (p.upload_at, _PRIO_UPLOAD, c) for c, p in self.pending.items()
+        ] + [(t, _PRIO_CHECKIN, c) for c, t in self.idle.items()]
+        heapq.heapify(self._heap)
+
+    def _heap_valid(self, ev: Tuple[float, int, int]) -> bool:
+        t, prio, c = ev
+        if prio == _PRIO_UPLOAD:
+            p = self.pending.get(c)
+            return p is not None and p.upload_at == t
+        return self.idle.get(c) == t
+
+    def _next_event(self) -> Optional[Tuple[float, int, int]]:
+        """(time, prio, client) of the earliest event, or None if quiescent.
+
+        Ties break (prio, client): at equal times uploads precede
+        check-ins — the buffer flush a K-th upload triggers must land
+        before a same-instant check-in downloads the state.  O(log N) via
+        a lazily-invalidated heap; keys are fully state-derived (no
+        insertion sequence), so restore reproduces the exact order.
+        """
+        while self._heap:
+            ev = self._heap[0]
+            if self._heap_valid(ev):
+                return ev
+            heapq.heappop(self._heap)  # stale entry: superseded schedule
+        return None
+
+    def step(self) -> Dict[str, Any]:
+        """Process one event; returns a small record of what happened."""
+        ev = self._next_event()
+        if ev is None:
+            raise RuntimeError("no schedulable events (empty population?)")
+        heapq.heappop(self._heap)
+        t, prio, cid = ev
+        self.clock = max(self.clock, t)
+        self.events_processed += 1
+        if prio == _PRIO_CHECKIN:
+            return self._on_checkin(cid, t)
+        return self._on_upload(cid, t)
+
+    def _on_checkin(self, cid: int, t: float) -> Dict[str, Any]:
+        del self.idle[cid]
+        base = self.version
+        self.version_storages.setdefault(base, self.storage)
+        rnd = self.round_counters[cid]
+        self.round_counters[cid] = rnd + 1
+        k = self.event_counters[cid]
+        latency = self.trace.round_latency(cid, k, t)
+        self.event_counters[cid] = k + 1
+        self.pending[cid] = _Pending(base, rnd, t + latency)
+        heapq.heappush(self._heap, (t + latency, _PRIO_UPLOAD, cid))
+        if self.stats is not None:
+            self.stats.start_round(self.omc, rnd, cid)
+        return dict(event="checkin", client=cid, t=t, version=base,
+                    round=rnd, latency=latency)
+
+    def _on_upload(self, cid: int, t: float) -> Dict[str, Any]:
+        p = self.pending[cid]
+        base, rnd = p.base_version, p.round_index
+        staleness = self.version - base
+        model, loss = self._train(cid, base)
+        del self.pending[cid]
+        dropped = (self.acfg.max_staleness is not None
+                   and staleness > self.acfg.max_staleness)
+        if self.stats is not None:
+            self.stats.finish_round(self.omc, rnd, cid, staleness,
+                                    dropped=dropped)
+        if dropped:
+            self.dropped_stale += 1
+        else:
+            self.buffer.append(_BufferEntry(cid, base, model, loss))
+            self.completed += 1
+        self._gc_versions()
+        k = self.event_counters[cid]
+        delay = self.trace.checkin_delay(cid, k, t)
+        self.event_counters[cid] = k + 1
+        self.idle[cid] = t + delay
+        heapq.heappush(self._heap, (t + delay, _PRIO_CHECKIN, cid))
+        flushed = False
+        if len(self.buffer) >= self.acfg.buffer_goal:
+            self._flush()
+            flushed = True
+        return dict(event="upload", client=cid, t=t, staleness=staleness,
+                    dropped=dropped, flushed=flushed)
+
+    # -- lazy batched training ---------------------------------------------
+
+    def _train(self, cid: int, base: int) -> Tuple[Any, float]:
+        """Trained model for (cid, base), batching every still-untrained
+        client that downloaded the same version into padded calls of the
+        one compiled program (each lane keyed by its client's own round
+        counter — see :func:`make_batch_train_fn`)."""
+        key = (base, cid)
+        if key not in self.trained:
+            group = [(c, p.round_index) for c, p in self.pending.items()
+                     if p.base_version == base and (base, c) not in self.trained]
+            storage = self.version_storages[base]
+            cap = self.acfg.capacity
+            for i in range(0, len(group), cap):
+                chunk = group[i:i + cap]
+                padded = chunk + [chunk[-1]] * (cap - len(chunk))
+                models, losses = self._batch_fn(
+                    storage,
+                    jnp.asarray([c for c, _ in padded], jnp.int32),
+                    jnp.asarray([r for _, r in padded], jnp.int32),
+                )
+                for j, (c, _) in enumerate(chunk):
+                    m = jax.tree_util.tree_map(lambda x: x[j], models)
+                    self.trained[(base, c)] = (m, float(losses[j]))
+        return self.trained.pop(key)
+
+    def _gc_versions(self) -> None:
+        live = {p.base_version for p in self.pending.values()}
+        live.add(self.version)
+        for v in [v for v in self.version_storages if v not in live]:
+            del self.version_storages[v]
+        for k in [k for k in self.trained if k[0] not in live]:
+            del self.trained[k]
+
+    # -- buffered aggregation ----------------------------------------------
+
+    def _flush(self) -> None:
+        entries = self.buffer[:self.acfg.buffer_goal]
+        self.buffer = self.buffer[self.acfg.buffer_goal:]
+        staleness = np.asarray(
+            [self.version - e.base_version for e in entries], np.float32
+        )
+        w = flush_weights(staleness, self.acfg.decay, self.acfg.decay_mode)
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *[e.model for e in entries]
+        )
+        self.storage = self._flush_fn(self.storage, stacked, w)
+        self.version += 1
+        rec = dict(
+            version=self.version,
+            clock=round(float(self.clock), 6),
+            buffer=len(entries),
+            loss=float(np.mean([e.loss for e in entries])),
+            staleness_mean=float(staleness.mean()),
+            staleness_max=int(staleness.max()),
+            completed=self.completed,
+            dropped_stale=self.dropped_stale,
+        )
+        if self.stats is not None:
+            rec.update(self.stats.snapshot())
+        self.history.append(rec)
+        self._gc_versions()
+
+    # -- driving ------------------------------------------------------------
+
+    def run_until(self, *, flushes: Optional[int] = None,
+                  uploads: Optional[int] = None,
+                  time_limit: Optional[float] = None,
+                  max_events: int = 10_000_000) -> None:
+        """Advance the virtual clock until a target is reached (whichever
+        of ``flushes`` / ``uploads`` / ``time_limit`` comes first)."""
+        if flushes is None and uploads is None and time_limit is None:
+            raise ValueError("need flushes, uploads, or time_limit")
+        target_v = self.version + flushes if flushes is not None else None
+        target_u = self.completed + uploads if uploads is not None else None
+        for _ in range(max_events):
+            if target_v is not None and self.version >= target_v:
+                return
+            if target_u is not None and self.completed >= target_u:
+                return
+            nxt = self._next_event()
+            if nxt is None or (time_limit is not None and nxt[0] > time_limit):
+                return
+            self.step()
+        raise RuntimeError(f"run_until exceeded max_events={max_events}")
+
+    def server_params(self):
+        """Decompressed f32 view of the current server model."""
+        return decompress_tree(self.storage)
+
+
+def run_async_training(
+    family, cfg, omc: OMCConfig, sim: SimConfig, acfg: AsyncConfig,
+    trace: ClientTrace, data_fn, init_key, *, num_clients: int,
+    flushes: int, wire: bool = True,
+    log: Optional[Callable[[str], None]] = None,
+) -> Tuple[Any, List[Dict[str, Any]], AsyncRunner]:
+    """Async mirror of :func:`repro.federated.engine.run_training_vectorized`.
+
+    Runs the event loop for ``flushes`` buffer flushes and returns
+    ``(final storage, history, runner)`` — one history row per flush, with
+    virtual-clock timing, staleness distribution, and (``wire=True``) the
+    cumulative :class:`~repro.federated.accounting.AsyncWireStats` ledger.
+    """
+    runner = AsyncRunner(
+        family, cfg, omc, sim, acfg, trace, num_clients=num_clients,
+        data_fn=data_fn, init_key=init_key, wire=wire,
+    )
+    for i in range(flushes):
+        runner.run_until(flushes=1)
+        if log and (i == 0 or (i + 1) % max(flushes // 4, 1) == 0):
+            h = runner.history[-1]
+            log(f"flush {i + 1}/{flushes}: " +
+                ", ".join(f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}"
+                          for k, v in h.items()))
+    return runner.storage, runner.history, runner

@@ -15,6 +15,24 @@ import jax
 import jax.numpy as jnp
 
 
+def validate_report_goal(goal: int, cohort_size: int, *,
+                         what: str = "report_goal") -> int:
+    """Shared gate for "close after N reports" knobs: ``1 <= N <= cohort``.
+
+    Used by :class:`CohortPlan` (sync deadline semantics) and by the async
+    runtime's buffer goal K (:class:`repro.federated.async_engine.AsyncConfig`
+    — flush after K uploads) so both ends of the async-vs-sync axis reject
+    the same degenerate values (0 or negative would mean "aggregate nothing
+    forever"; above the population the goal can never be met).
+    """
+    goal = int(goal)
+    if not 1 <= goal <= cohort_size:
+        raise ValueError(
+            f"{what} must satisfy 1 <= {what} <= {cohort_size}, got {goal}"
+        )
+    return goal
+
+
 @dataclasses.dataclass(frozen=True)
 class CohortPlan:
     num_clients: int  # population size
@@ -24,10 +42,14 @@ class CohortPlan:
     straggler_rate: float = 0.0  # fraction dropped at the deadline (slowest)
 
     def __post_init__(self):
+        if self.cohort_size < 1 or self.cohort_size > self.num_clients:
+            raise ValueError(
+                f"cohort_size must satisfy 1 <= cohort_size <= "
+                f"{self.num_clients}, got {self.cohort_size}"
+            )
         if self.report_goal is None:
             object.__setattr__(self, "report_goal", self.cohort_size)
-        if self.report_goal > self.cohort_size:
-            raise ValueError("report_goal cannot exceed cohort_size")
+        validate_report_goal(self.report_goal, self.cohort_size)
 
 
 def sample_cohort(key: jax.Array, plan: CohortPlan, round_index) -> jax.Array:

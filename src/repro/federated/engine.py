@@ -27,6 +27,12 @@ PPQ masks, and data stream as the reference loop; client models differ only
 by batched-op reassociation (documented tolerance), and wire-byte
 accounting matches the loop path bit-for-bit.  See DESIGN.md §9 for the
 layout and the loop-vs-vectorized decision guide.
+
+Every round here is still a hard barrier — the program returns when the
+whole cohort has trained.  When the fleet is straggler-dominated (heavy-tail
+latency, diurnal availability), use the event-driven non-barrier runtime
+:mod:`repro.federated.async_engine` (DESIGN.md §10), which batches its
+local training through the same ``make_client_fn`` body.
 """
 
 from __future__ import annotations

@@ -22,7 +22,10 @@ same single-client update (``make_client_fn``) over stacked client states
 and is equivalence-tested against this loop (DESIGN.md §9 documents the
 stacked-state layout, the tolerance contract, and when to use which path).
 Client failures / stragglers drop reports through
-:mod:`repro.federated.cohort`.
+:mod:`repro.federated.cohort`.  Both this loop and the engine are
+barrier-synchronous; the event-driven buffered-aggregation runtime
+(:mod:`repro.federated.async_engine`, DESIGN.md §10) lifts the barrier for
+straggler-dominated fleets while reusing this module's ``make_client_fn``.
 """
 
 from __future__ import annotations

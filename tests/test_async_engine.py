@@ -1,0 +1,402 @@
+"""Async runtime vs sync engine: equivalence gate, staleness weights, wire.
+
+The contract under test (DESIGN.md §10): with ``buffer_goal == cohort
+size``, a zero-jitter FixedTrace, and staleness decay disabled, the
+event-driven runtime degenerates to barrier-synchronous rounds — every
+version's buffer holds exactly one fresh update per client — and must
+reproduce the sync engine's server tree within the documented
+one-quantization-step tolerance, with wire-byte accounting reconciling
+byte-exactly against both the sync paths and the wire codec.  Plus: the
+staleness-weight contract (property-tested), buffer-goal validation shared
+with CohortPlan, trace determinism, max-staleness drops, and the
+version-stamped async session protocol.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_stub import given, settings, st
+from repro.api import codecs
+from repro.api.session import FLSession
+from repro.core.omc import OMCConfig
+from repro.core.store import decompress_tree
+from repro.data.synthetic import make_frame_task
+from repro.federated import accounting, async_engine, engine, simulate, traces
+from repro.federated.cohort import (
+    CohortPlan,
+    aggregate_weighted,
+    validate_report_goal,
+)
+from repro.federated.state import compress_params
+
+from repro.models import conformer as cf
+
+CFG = cf.ConformerConfig(
+    n_layers=2, d_model=32, n_heads=4, d_ff=64, n_classes=16, d_in=8
+)
+OMC = OMCConfig.parse("S1E3M7")
+SIM = simulate.SimConfig(local_steps=2, client_lr=0.1)
+C = 6  # equivalence cohort: population == cohort == buffer goal
+TASK = make_frame_task(d_in=CFG.d_in, n_classes=CFG.n_classes, seq_len=16,
+                       num_clients=64)
+DATA_FN = lambda c, r, s: TASK.batch(c, r, s, 4)
+
+
+def _async_run(num_clients, acfg, trace, flushes, wire=True, local_steps=2):
+    sim = dataclasses.replace(SIM, local_steps=local_steps)
+    return async_engine.run_async_training(
+        cf, CFG, OMC, sim, acfg, trace, DATA_FN, jax.random.PRNGKey(0),
+        num_clients=num_clients, flushes=flushes, wire=wire,
+    )
+
+
+# ---------------------------------------------------------------------------
+# The equivalence gate
+# ---------------------------------------------------------------------------
+
+
+def test_async_matches_sync_engine_at_degenerate_trace():
+    """buffer == cohort, zero jitter, decay off -> sync engine semantics."""
+    plan = CohortPlan(num_clients=C, cohort_size=C)
+    key = jax.random.PRNGKey(0)
+    eng_storage, eng_hist = engine.run_training_vectorized(
+        cf, CFG, OMC, SIM, engine.CohortSpec(plan), DATA_FN, key,
+        num_rounds=3,
+    )
+    st_, hist, runner = _async_run(
+        C, async_engine.AsyncConfig(buffer_goal=C),
+        traces.FixedTrace(latency=1.0), flushes=3,
+    )
+
+    # every flush was a full fresh cohort: K updates, zero staleness
+    for eh, ah in zip(eng_hist, hist):
+        assert ah["buffer"] == C and ah["staleness_max"] == 0
+        assert abs(eh["loss"] - ah["loss"]) < 1e-3
+    # wire bytes reconcile byte-exactly with the sync engine's accounting
+    assert hist[-1]["down_bytes"] == sum(h["down_bytes"] for h in eng_hist)
+    assert hist[-1]["up_bytes"] == sum(h["up_bytes"] for h in eng_hist)
+    assert hist[-1]["stale_up_bytes"] == 0
+    assert hist[-1]["in_flight_bytes"] == 0
+
+    # server trees agree within the one-quantization-step tolerance
+    a, b = decompress_tree(eng_storage), decompress_tree(st_)
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        d = np.abs(np.asarray(x) - np.asarray(y))
+        assert d.max() <= 6e-3, d.max()
+        assert d.mean() <= 1e-4, d.mean()
+
+
+def test_async_accounting_reconciles_with_codec():
+    """The ledger's totals are codec payload sizes, byte for byte."""
+    _, hist, runner = _async_run(
+        C, async_engine.AsyncConfig(buffer_goal=C),
+        traces.FixedTrace(latency=1.0), flushes=2,
+    )
+    table = runner.stats.table
+    # 2 flushes x C clients, every download the full compressed state
+    rep = codecs.payload_bytes_report(runner.storage)
+    assert runner.stats.down_bytes == 2 * C * rep["wire_bytes"]
+    assert rep["wire_bytes"] == table.download_bytes(OMC)
+    # uploads: per-(version, client) PPQ-masked payloads — serialize one and
+    # compare against what the ledger charged
+    up = sum(
+        accounting.client_upload_bytes(table, OMC, v, c)
+        for v in (0, 1) for c in range(C)
+    )
+    assert runner.stats.up_bytes == up
+    tree = engine.masked_upload_tree(
+        decompress_tree(runner.storage), runner.specs, OMC, 1, 3
+    )
+    assert codecs.peek_payload(codecs.encode_payload(tree)).body_bytes == (
+        accounting.client_upload_bytes(table, OMC, 1, 3)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Staleness-weight contract
+# ---------------------------------------------------------------------------
+
+
+@given(
+    st.lists(st.integers(min_value=0, max_value=50), min_size=1, max_size=16),
+    st.floats(min_value=0.0, max_value=4.0, allow_nan=False),
+    st.sampled_from(["poly", "exp"]),
+)
+@settings(max_examples=50, deadline=None)
+def test_buffer_weights_contract(staleness, decay, mode):
+    """Non-negative, sum to 1 over the buffer, monotone in staleness."""
+    s = np.asarray(staleness, np.float32)
+    w = np.asarray(async_engine.buffer_weights(s, decay, mode))
+    assert (w >= 0).all()
+    assert w.sum() == pytest.approx(1.0, rel=1e-5)
+    # monotone: staler entries never outweigh fresher ones
+    order = np.argsort(s)
+    assert (np.diff(w[order]) <= 1e-7).all()
+    if (s == 0).all() or decay == 0.0:
+        np.testing.assert_allclose(w, 1.0 / len(s), rtol=1e-6)
+
+
+def test_zero_staleness_reduces_to_fedavg():
+    """All-fresh buffer: the weighted aggregate IS the zero-weight FedAvg
+    mean, bit-for-bit (weights are exactly 1.0, same op as the sync path)."""
+    raw = np.asarray(
+        async_engine.staleness_weights(np.zeros(5, np.float32), 1.5, "poly")
+    )
+    np.testing.assert_array_equal(raw, np.ones(5, np.float32))
+    stacked = {"w": jnp.asarray(np.random.default_rng(0).normal(size=(5, 7)),
+                                jnp.float32)}
+    ones = jnp.ones((5,), jnp.float32)
+    agg = aggregate_weighted(stacked, jnp.asarray(raw))
+    ref = aggregate_weighted(stacked, ones)
+    np.testing.assert_array_equal(np.asarray(agg["w"]), np.asarray(ref["w"]))
+
+
+# ---------------------------------------------------------------------------
+# Validation (regression: report_goal / buffer goal 0 or negative)
+# ---------------------------------------------------------------------------
+
+
+def test_report_goal_validation_regression():
+    for bad in (0, -1, -100):
+        with pytest.raises(ValueError):
+            CohortPlan(num_clients=8, cohort_size=4, report_goal=bad)
+        with pytest.raises(ValueError):
+            validate_report_goal(bad, 4)
+    with pytest.raises(ValueError):
+        CohortPlan(num_clients=8, cohort_size=4, report_goal=5)  # > cohort
+    with pytest.raises(ValueError):
+        CohortPlan(num_clients=4, cohort_size=8)  # cohort > population
+    assert CohortPlan(num_clients=8, cohort_size=4).report_goal == 4
+
+
+def test_async_buffer_goal_uses_same_validation():
+    for bad in (0, -3, 99):  # 99 > population of 4
+        with pytest.raises(ValueError):
+            async_engine.AsyncRunner(
+                cf, CFG, OMC, SIM,
+                async_engine.AsyncConfig(buffer_goal=bad),
+                traces.FixedTrace(), num_clients=4, data_fn=DATA_FN,
+                init_key=jax.random.PRNGKey(0),
+            )
+    with pytest.raises(ValueError):
+        async_engine.AsyncConfig(buffer_goal=2, decay=-1.0)
+    with pytest.raises(ValueError):
+        async_engine.AsyncConfig(buffer_goal=2, decay_mode="nope")
+
+
+# ---------------------------------------------------------------------------
+# Traces
+# ---------------------------------------------------------------------------
+
+
+def test_traces_deterministic_and_shaped():
+    p = traces.ParetoTrace(seed=7, latency=2.0, alpha=1.2)
+    xs = [p.round_latency(3, k, 0.0) for k in range(200)]
+    assert xs == [p.round_latency(3, k, 0.0) for k in range(200)]  # replay
+    assert min(xs) >= 2.0  # scale-pinned minimum
+    assert max(xs) > 3 * np.median(xs)  # heavy tail actually bites
+
+    d = traces.DiurnalTrace(seed=1, interval=1.0, period=24.0, depth=0.9)
+    delays = [d.checkin_delay(0, 0, t) for t in np.linspace(0, 24, 25)]
+    assert max(delays) > 3 * min(delays)  # trough vs peak swing
+
+    t = traces.TieredTrace(
+        base=traces.FixedTrace(latency=1.0),
+        profiles=(engine.profile("f32"), engine.profile("s1e3m7")),
+    )
+    assert t.round_latency(0, 0, 0.0) == pytest.approx(1.0)  # f32 tier
+    assert t.round_latency(1, 0, 0.0) > 1.5  # compressed tier is slower
+    assert t.tier_of(4) == 0 and t.tier_of(5) == 1  # engine striping
+
+
+def test_repeat_rounds_under_one_version_draw_fresh_data():
+    """Regression: a fast client's second round under an unchanged server
+    version must key data/PPQ by its own round counter, not the version —
+    otherwise the buffer aggregates bit-identical duplicate updates."""
+    runner = async_engine.AsyncRunner(
+        cf, CFG, OMC, dataclasses.replace(SIM, local_steps=1),
+        async_engine.AsyncConfig(buffer_goal=4),
+        # odd clients 10x slower: the fast pair cycles twice under v0
+        # before the buffer ever reaches K
+        traces.TieredTrace(latency=1.0, multipliers=(1.0, 10.0)),
+        num_clients=4, data_fn=DATA_FN, init_key=jax.random.PRNGKey(0),
+    )
+    runner.run_until(uploads=3)  # one short of the flush: inspect the buffer
+    assert runner.version == 0  # nothing flushed; all rounds under v0
+    assert runner.round_counters[0] == 2  # fast client started 2 rounds
+    by_client = {}
+    for e in runner.buffer:
+        by_client.setdefault(e.client_id, []).append(e.model)
+    pair = next(ms for ms in by_client.values() if len(ms) == 2)
+    diffs = [
+        float(np.abs(np.asarray(a) - np.asarray(b)).max())
+        for a, b in zip(jax.tree_util.tree_leaves(pair[0]),
+                        jax.tree_util.tree_leaves(pair[1]))
+    ]
+    assert max(diffs) > 0.0, "second round produced a bit-identical update"
+
+
+def test_tiered_trace_forwards_own_fields():
+    t = traces.TieredTrace(latency=5.0, multipliers=(1.0, 2.0))
+    assert t.round_latency(0, 0, 0.0) == pytest.approx(5.0)
+    assert t.round_latency(1, 0, 0.0) == pytest.approx(10.0)
+    with pytest.raises(ValueError):  # explicit base + own timing fields
+        traces.TieredTrace(latency=5.0, base=traces.FixedTrace(),
+                           multipliers=(1.0, 2.0))
+
+
+def test_max_staleness_drops_and_stale_bytes():
+    """A 2-tier trace where odd clients are 40x slower: their uploads arrive
+    stale; with max_staleness=0 they are dropped (bytes ledgered as waste),
+    without it they land with decayed weight."""
+    trace = traces.TieredTrace(base=traces.FixedTrace(latency=1.0),
+                               multipliers=(1.0, 3.5))
+    _, hist, runner = _async_run(
+        4, async_engine.AsyncConfig(buffer_goal=2, decay=1.0,
+                                    max_staleness=0),
+        trace, flushes=6, local_steps=1,
+    )
+    assert runner.dropped_stale > 0
+    assert runner.stats.dropped_up_bytes > 0
+    assert runner.stats.n_stale == 0  # dropped, never aggregated
+
+    _, hist2, runner2 = _async_run(
+        4, async_engine.AsyncConfig(buffer_goal=2, decay=1.0), trace,
+        flushes=6, local_steps=1,
+    )
+    assert runner2.dropped_stale == 0
+    assert runner2.stats.stale_up_bytes > 0  # aggregated, flagged stale
+    assert any(h["staleness_max"] > 0 for h in hist2)
+
+
+def test_in_flight_accounting():
+    _, _, runner = _async_run(
+        4, async_engine.AsyncConfig(buffer_goal=4),
+        traces.FixedTrace(latency=1.0), flushes=1,
+    )
+    # quiescent right after the flush: nothing in flight, peak was the
+    # full concurrent cohort (download + committed upload per client)
+    assert runner.stats.in_flight_bytes == 0
+    table = runner.stats.table
+    expect_peak = sum(
+        table.download_bytes(OMC)
+        + accounting.client_upload_bytes(table, OMC, 0, c)
+        for c in range(4)
+    )
+    assert runner.stats.peak_in_flight_bytes == expect_peak
+    # drive half a generation: 4 check-ins land, uploads not yet arrived
+    runner.run_until(time_limit=1.5)
+    assert len(runner.pending) == 4
+    assert runner.stats.in_flight_bytes > 0
+
+
+# ---------------------------------------------------------------------------
+# Async session protocol (version-stamped tickets over the real codec)
+# ---------------------------------------------------------------------------
+
+
+def _client_train(tree, factor=0.9):
+    # perturb only the first leaf: round-over-round change stays sparse, so
+    # delta downloads genuinely beat full payloads (the case under test)
+    params = decompress_tree(tree)
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    return jax.tree_util.tree_unflatten(
+        treedef, [leaves[0] * factor] + leaves[1:]
+    )
+
+
+def test_async_session_full_and_delta_reconcile():
+    from repro.models import transformer as tr
+
+    tcfg = tr.TransformerConfig(n_layers=1, d_model=32, n_heads=2,
+                                n_kv_heads=1, d_ff=64, vocab=64)
+    omc = OMCConfig.parse("S1E3M7")
+    specs = tr.param_specs(tcfg)
+    sess = FLSession(tr, tcfg, omc,
+                     plan=CohortPlan(num_clients=4, cohort_size=3))
+    sess.enable_async(2, decay=1.0)
+
+    def upload_for(ticket, held=None):
+        held_digest = codecs.tree_digest(held) if held is not None else 0
+        blob = ticket.payload_for(held_digest=held_digest)
+        tree, info = codecs.decode_payload(blob, base=held)
+        trained = _client_train(tree)
+        up_tree = compress_params(trained, specs, omc)
+        up = codecs.encode_payload(up_tree, base=tree,
+                                   round_index=ticket.server_version)
+        return tree, blob, up, info
+
+    # --- version 0: two fresh clients fill the buffer --------------------
+    t0, t1, t2 = sess.checkin(0), sess.checkin(1), sess.checkin(2)
+    assert t0.server_version == 0 and t0.delta_payload is None
+    tree0, blob0, up0, info0 = upload_for(t0)
+    assert not info0.is_delta  # first download is a full payload
+    # full download body == the codec's byte report of the server state
+    assert codecs.peek_payload(blob0).body_bytes == (
+        codecs.payload_bytes_report(sess._version_storages[0])["wire_bytes"]
+    )
+    _, blob1, up1, _ = upload_for(t1)
+    sess.ingest_async(0, up0)
+    assert sess.server_version == 0  # buffer at 1/2
+    sess.ingest_async(1, up1)
+    assert sess.server_version == 1  # flushed
+    down_so_far = len(blob0) + len(blob1)
+    assert sess.traffic["down_bytes"] == down_so_far
+    assert sess.traffic["up_bytes"] == len(up0) + len(up1)
+
+    # --- client 2's ticket (v0) is now stale; its upload still decodes
+    # against the v0 base the ticket pinned --------------------------------
+    tree2, blob2, up2, _ = upload_for(t2)
+    sess.ingest_async(2, up2)
+    assert sess.server_version == 1 and len(sess._async_buffer) == 1
+
+    # --- returning client takes a delta against its held version ---------
+    t0b = sess.checkin(0, held_version=0)
+    assert t0b.delta_payload is not None
+    held = tree0  # what client 0 decoded at v0
+    blob = t0b.payload_for(held_digest=codecs.tree_digest(held))
+    assert t0b.took_delta and len(blob) < len(t0b.payload)
+    tree, info = codecs.decode_payload(blob, base=held)
+    assert info.is_delta
+    # delta decodes to exactly the current server state
+    full_now = codecs.decode_payload(t0b.payload)[0]
+    for x, y in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(full_now)):
+        a, b = x, y
+        if hasattr(a, "codes"):
+            np.testing.assert_array_equal(np.asarray(a.codes),
+                                          np.asarray(b.codes))
+        else:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # issued bytes are the delta's, folded into traffic at ingestion
+    up_tree = compress_params(_client_train(tree), specs, omc)
+    before = sess.traffic["down_bytes"]
+    sess.ingest_async(0, codecs.encode_payload(
+        up_tree, base=tree, round_index=t0b.server_version))
+    assert sess.traffic["down_bytes"] == before + len(blob)
+
+
+def test_async_session_guards():
+    from repro.models import transformer as tr
+
+    tcfg = tr.TransformerConfig(n_layers=1, d_model=32, n_heads=2,
+                                n_kv_heads=1, d_ff=64, vocab=64)
+    sess = FLSession(tr, tcfg, OMCConfig.parse("S1E3M7"),
+                     plan=CohortPlan(num_clients=4, cohort_size=2))
+    with pytest.raises(RuntimeError):
+        sess.checkin(0)  # enable_async first
+    with pytest.raises(ValueError):
+        sess.enable_async(0)  # same gate as report_goal
+    with pytest.raises(ValueError):
+        sess.enable_async(3)  # > plan.cohort_size
+    sess.enable_async(2)
+    sess.checkin(0)
+    with pytest.raises(RuntimeError):
+        sess.checkin(0)  # one open ticket per client
+    with pytest.raises(KeyError):
+        sess.ingest_async(3, b"")  # never checked in

@@ -77,6 +77,62 @@ def test_resume_replays_bit_exact(tmp_path):
     _assert_trees_equal(cont, restored)
 
 
+def _async_runner():
+    from repro.data.synthetic import make_frame_task
+    from repro.federated import async_engine, simulate, traces
+    from repro.models import conformer as cf
+
+    ccfg = cf.ConformerConfig(n_layers=2, d_model=32, n_heads=4, d_ff=64,
+                              n_classes=16, d_in=8)
+    task = make_frame_task(d_in=8, n_classes=16, seq_len=16, num_clients=8)
+    return async_engine.AsyncRunner(
+        cf, ccfg, OMCConfig.parse("S1E3M7"),
+        simulate.SimConfig(local_steps=1, client_lr=0.1),
+        async_engine.AsyncConfig(buffer_goal=4, decay=0.5),
+        traces.ParetoTrace(seed=3, latency=1.0, alpha=1.5),
+        num_clients=8, data_fn=lambda c, r, s: task.batch(c, r, s, 4),
+        init_key=jax.random.PRNGKey(0),
+    )
+
+
+def test_async_resume_mid_buffer(tmp_path):
+    """Kill an async run mid-buffer; restore must continue identically —
+    buffer contents, server version, pending version-stamped tickets, trace
+    counters, and the wire ledger all round-trip (DESIGN.md §10)."""
+    runner = _async_runner()
+    runner.run_until(uploads=6)  # 6 uploads, K=4: buffer is mid-fill
+    assert len(runner.buffer) > 0, "test wants a partially-filled buffer"
+    assert runner.pending, "test wants in-flight version-stamped tickets"
+    ck.save_async_state(str(tmp_path), runner)
+
+    cont = runner  # continue the original in place
+    cont.run_until(flushes=2)
+
+    fresh = _async_runner()
+    extra = ck.restore_async_state(
+        ck.latest_checkpoint(str(tmp_path))[0], fresh
+    )
+    assert extra["kind"] == "async_runner"
+    assert fresh.version == extra["version"]
+    fresh.run_until(flushes=2)
+
+    assert fresh.version == cont.version
+    assert fresh.clock == cont.clock
+    assert fresh.completed == cont.completed
+    assert fresh.stats.snapshot() == cont.stats.snapshot()
+    _assert_trees_equal(cont.storage, fresh.storage)
+    assert [h["version"] for h in fresh.history] == [
+        h["version"] for h in cont.history
+    ]
+
+
+def test_async_restore_rejects_sync_checkpoint(tmp_path):
+    ck.save_state(str(tmp_path), 1, _state())
+    with pytest.raises(ValueError):
+        ck.restore_async_state(ck.latest_checkpoint(str(tmp_path))[0],
+                               _async_runner())
+
+
 def test_structure_mismatch_raises(tmp_path):
     st = _state()
     ck.save_state(str(tmp_path), 1, st)
