@@ -1,0 +1,209 @@
+"""Quality-vs-wire-bytes Pareto frontier across the strategy zoo (DESIGN.md §11).
+
+For each model family (a reduced Conformer and a small transformer LM), this
+benchmark briefly trains FP32 reference weights, then pushes them through
+every strategy in :func:`repro.compress.default_zoo` — the paper's OMC
+minifloats, top-k sparsification, ternary TNT, and the quantize→top-k→DEFLATE
+pipeline — and records the resulting (eval-loss, wire-bytes) point.  Points
+that no other strategy beats on *both* axes are flagged ``pareto=True``; the
+FP32 uncompressed model is included as the anchor point.
+
+Every row's wire bytes are reconciled three ways before being reported
+(byte-exact, asserted, see ``reconciled``):
+
+  * ``repro.compress.tree_wire_bytes`` over the encoded tree,
+  * the serialized §7 payload's actual ``body_bytes``
+    (``repro.api.codecs``), decoded back bit-exactly (digest-checked),
+  * for shape-determined strategies, the planning-side ledger
+    ``repro.federated.accounting.WireTable.download_bytes_strategy`` —
+    and for the paper's own S1E3M7+PVT point additionally the historical
+    ``WireTable.download_bytes(omc)``, which must stay inside the ~59%
+    byte-reduction envelope (wire_ratio <= 0.6).
+
+    PYTHONPATH=src python benchmarks/compress_pareto.py            # full
+    PYTHONPATH=src python benchmarks/compress_pareto.py --smoke    # CI-sized
+
+Emits ``experiments/bench/compress_strategies.json``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+try:
+    from .common import conformer_setup, eval_loss, print_table, save_result
+except ImportError:  # run as a script: python benchmarks/compress_pareto.py
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from common import conformer_setup, eval_loss, print_table, save_result
+
+from repro import compress
+from repro.api import codecs
+from repro.core.omc import OMCConfig
+from repro.data.synthetic import make_lm_task
+from repro.federated import accounting
+from repro.models import transformer as tr
+from repro.models.common import IDENTITY_MAT
+
+LM_CFG = tr.TransformerConfig(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                              d_ff=128, vocab=256)
+
+
+def _pretrain(family, cfg, task, steps: int, batch: int, lr: float = 0.1,
+              seed: int = 0):
+    """A few jitted SGD steps — enough structure in the weights that lossy
+    transport visibly moves the eval loss."""
+    params = family.init(jax.random.PRNGKey(seed), cfg)
+
+    @jax.jit
+    def step(p, b):
+        loss, g = jax.value_and_grad(
+            lambda q: family.loss(cfg, q, b, IDENTITY_MAT))(p)
+        return jax.tree_util.tree_map(lambda w, gg: w - lr * gg, p, g), loss
+
+    for i in range(steps):
+        params, _ = step(params, task.batch(i % 4, i, 0, batch))
+    return params
+
+
+def _model_setups(smoke: bool, seed: int):
+    """(name, family, cfg, params_f32, eval_batches) per model family."""
+    steps = 6 if smoke else 40
+    batch = 2 if smoke else 4
+    out = []
+
+    cf, ccfg, ctask, _, c_eval = conformer_setup(seed=seed)
+    c_eval = c_eval[:2] if smoke else c_eval
+    out.append(("conformer_s", cf, ccfg,
+                _pretrain(cf, ccfg, ctask, steps, batch, seed=seed), c_eval))
+
+    ltask = make_lm_task(vocab=LM_CFG.vocab, seq_len=32, num_clients=4,
+                         seed=seed)
+    l_eval = [ltask.batch(100 + i, 10_000, 0, batch)
+              for i in range(2 if smoke else 4)]
+    out.append(("transformer_lm", tr, LM_CFG,
+                _pretrain(tr, LM_CFG, ltask, steps, batch, seed=seed), l_eval))
+    return out
+
+
+def _measure(strategy, family, cfg, params_f32, eval_batches, omc, wt):
+    """One Pareto point: encode, reconcile bytes three ways, eval quality."""
+    specs = family.param_specs(cfg)
+    t0 = time.time()
+    tree = compress.encode_tree(strategy, params_f32, omc, specs)
+    t_encode = time.time() - t0
+    twb = compress.tree_wire_bytes(tree)
+
+    # wire reconciliation: serialized body == tree accounting == codec report
+    payload = codecs.encode_payload(tree, strategy=strategy)
+    info = codecs.peek_payload(payload)
+    rep = codecs.payload_bytes_report(tree)
+    assert info.body_bytes == twb["wire_bytes"] == rep["wire_bytes"], (
+        strategy.label, info.body_bytes, twb["wire_bytes"], rep["wire_bytes"])
+    assert info.strategy == strategy.name
+    decoded, _ = codecs.decode_payload(payload)
+    assert codecs.tree_digest(decoded) == codecs.tree_digest(tree)
+
+    # planning-side ledger (shape-determined strategies only)
+    plan = strategy.plan_wire_bytes(1, 1)
+    planned = plan is not None
+    if planned:
+        assert wt.download_bytes_strategy(strategy) == twb["wire_bytes"], (
+            strategy.label, wt.download_bytes_strategy(strategy),
+            twb["wire_bytes"])
+
+    loss = eval_loss(family, cfg, compress.decode_tree(tree), eval_batches)
+    return dict(
+        strategy=strategy.name,
+        label=strategy.label,
+        wire_version=strategy.wire_version,
+        delta_rule=strategy.delta_rule,
+        wire_bytes=twb["wire_bytes"],
+        wire_mb=round(twb["wire_bytes"] / 2**20, 4),
+        wire_ratio=round(twb["wire_ratio"], 4),
+        loss=loss,
+        planned=planned,
+        reconciled=True,
+        encode_ms=round(t_encode * 1e3, 1),
+        per_strategy=twb["per_strategy"],
+    )
+
+
+def _pareto_flags(rows):
+    """Non-dominated on (wire_bytes, loss): smaller is better on both."""
+    for r in rows:
+        r["pareto"] = not any(
+            o is not r
+            and o["wire_bytes"] <= r["wire_bytes"] and o["loss"] <= r["loss"]
+            and (o["wire_bytes"] < r["wire_bytes"] or o["loss"] < r["loss"])
+            for o in rows
+        )
+    return rows
+
+
+def run(smoke: bool = False, seed: int = 0):
+    zoo = compress.default_zoo()
+    omc = OMCConfig.parse("S1E3M7")  # selection policy shared by every point
+    models = {}
+    all_rows = []
+
+    for name, family, cfg, params_f32, eval_batches in _model_setups(
+            smoke, seed):
+        specs = family.param_specs(cfg)
+        wt = accounting.build_wire_table(params_f32, specs, omc)
+        baseline = eval_loss(family, cfg, params_f32, eval_batches)
+        fp32_bytes = wt.fp32_total
+
+        rows = [dict(strategy="fp32", label="fp32", wire_version=0,
+                     delta_rule=None, wire_bytes=fp32_bytes,
+                     wire_mb=round(fp32_bytes / 2**20, 4), wire_ratio=1.0,
+                     loss=baseline, planned=True, reconciled=True,
+                     encode_ms=0.0, per_strategy={})]
+        for s in zoo:
+            rows.append(_measure(s, family, cfg, params_f32, eval_batches,
+                                 omc, wt))
+
+        # the paper's own point must stay inside the ~59%-reduction envelope
+        paper = next(r for r in rows if r["label"] == "omc-s1e3m7")
+        assert paper["wire_bytes"] == wt.download_bytes(omc)
+        assert paper["wire_ratio"] <= 0.6, paper["wire_ratio"]
+
+        _pareto_flags(rows)
+        for r in rows:
+            r["model"] = name
+            r["delta_loss"] = round(r["loss"] - baseline, 6)
+        models[name] = dict(baseline_loss=baseline, fp32_bytes=fp32_bytes,
+                            points=rows)
+        all_rows.extend(rows)
+
+    print_table("Quality vs wire bytes (Pareto frontier)", all_rows,
+                ["model", "label", "wire_mb", "wire_ratio", "loss",
+                 "delta_loss", "pareto", "planned", "encode_ms"])
+    payload = dict(
+        smoke=smoke, seed=seed,
+        strategies=[s.describe() for s in zoo],
+        selection_fmt=omc.fmt.name,
+        models=models,
+    )
+    save_result("compress_strategies", payload)
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized: fewer pretrain steps and eval batches")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+    run(smoke=args.smoke, seed=args.seed)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -9,10 +9,10 @@ import time
 
 
 def main() -> None:
-    from . import (api_wire, async_scale, cohort_scale, fig3_pvt_stability,
-                   fig4_ppq_vs_apq, kernels_micro, memory_measured,
-                   roofline_report, table1_iid, table2_adaptation,
-                   table3_noniid, table4_ablation)
+    from . import (api_wire, async_scale, cohort_scale, compress_pareto,
+                   fig3_pvt_stability, fig4_ppq_vs_apq, kernels_micro,
+                   memory_measured, roofline_report, table1_iid,
+                   table2_adaptation, table3_noniid, table4_ablation)
 
     all_benches = {
         "table1_iid": table1_iid.run,
@@ -25,6 +25,7 @@ def main() -> None:
         "kernels_micro": kernels_micro.run,
         "roofline_report": roofline_report.run,
         "api_wire": api_wire.run,
+        "compress_pareto": compress_pareto.run,
         "cohort_scale": cohort_scale.run,
         "async_scale": async_scale.run,
     }

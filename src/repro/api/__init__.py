@@ -27,6 +27,7 @@ from .codecs import (  # noqa: F401
     negotiate_version,
     payload_bytes_report,
     peek_payload,
+    register_leaf_codec,
     tree_digest,
 )
 from .session import (  # noqa: F401

@@ -40,6 +40,16 @@ The encoder picks ``delta`` per leaf only when it is actually smaller than
 so ``encode_payload(tree, base=prev)`` is never worse than
 ``encode_payload(tree)`` by more than the per-leaf mode flag.
 
+Strategy leaves (DESIGN.md §11): the ``omc`` and ``raw`` kinds above are
+built in; the compression-strategy zoo (:mod:`repro.compress`) registers
+additional leaf kinds (``topk``, ``ternary``, ``pipeline``) through
+:func:`register_leaf_codec`, and payloads carrying them are stamped with a
+*strategy tag* + per-strategy wire version in the manifest.  ``decode``
+verifies the tag against the registered zoo — an unknown strategy or a
+version mismatch is a loud :class:`CodecError`, never silent corruption.
+The sparse XOR-delta above is the OMC strategy's delta rule; registered
+kinds travel full-only unless their codec implements its own delta.
+
 Byte accounting: for a full payload the body is exactly
 ``packed_bytes(n, fmt) + 8·s.size`` per compressed leaf plus ``itemsize·n``
 per raw leaf — the same accounting ``tree_bytes_report`` /
@@ -54,7 +64,7 @@ import dataclasses
 import json
 import struct
 import zlib
-from typing import Any, Dict, List, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -78,6 +88,63 @@ class CodecError(ValueError):
     """Malformed, corrupt, or version-incompatible payload."""
 
 
+# ---------------------------------------------------------------------------
+# strategy leaf-codec registry (DESIGN.md §11).  repro.compress registers the
+# zoo's kinds at import; decode lazily imports it on first contact with a
+# strategy payload so a fresh process can always decode.
+# ---------------------------------------------------------------------------
+
+_LEAF_CODECS: Dict[str, Tuple[type, Any, Any]] = {}
+
+
+def register_leaf_codec(kind: str, leaf_type: type, encode_fn, decode_fn) -> None:
+    """Register a strategy leaf kind: ``encode_fn(leaf, base) -> (meta,
+    [chunks])`` and ``decode_fn(meta, body, off, base) -> (leaf, off)``.
+    The body section MUST measure exactly ``leaf.wire_body_bytes()`` bytes
+    so every ledger reconciles (§11 byte-accounting obligation)."""
+    if kind in ("omc", "raw"):
+        raise ValueError(f"leaf kind {kind!r} is built in")
+    prev = _LEAF_CODECS.get(kind)
+    if prev is not None and prev[0] is not leaf_type:
+        raise ValueError(f"leaf kind {kind!r} already registered")
+    _LEAF_CODECS[kind] = (leaf_type, encode_fn, decode_fn)
+
+
+def _ensure_strategy_codecs() -> None:
+    """Import the zoo (idempotent) so its leaf codecs are registered."""
+    import repro.compress  # noqa: F401  (registration happens at import)
+
+
+def _leaf_kind(leaf) -> Optional[str]:
+    for kind, (leaf_type, _, _) in _LEAF_CODECS.items():
+        if isinstance(leaf, leaf_type):
+            return kind
+    return None
+
+
+def _check_strategy_tag(manifest: Dict[str, Any]) -> None:
+    """Reject unknown strategy tags / wire-version mismatches (CodecError)."""
+    name = manifest.get("strategy")
+    if name is None:
+        return
+    _ensure_strategy_codecs()
+    from repro.compress import available_strategies, strategy_class
+
+    try:
+        cls = strategy_class(name)
+    except KeyError:
+        raise CodecError(
+            f"unknown compression strategy tag {name!r}; "
+            f"registered zoo: {available_strategies()}"
+        ) from None
+    sver = int(manifest.get("strategy_version", 0))
+    if sver != cls.wire_version:
+        raise CodecError(
+            f"strategy {name!r} wire version mismatch: payload carries "
+            f"v{sver}, this zoo speaks v{cls.wire_version}"
+        )
+
+
 @dataclasses.dataclass(frozen=True)
 class PayloadInfo:
     """Parsed frame metadata (available without decoding the body)."""
@@ -92,6 +159,8 @@ class PayloadInfo:
     num_compressed: int
     num_delta: int
     base_digest: int  # tree_digest of the delta base; 0 for full payloads
+    strategy: Optional[str] = None  # zoo strategy tag (None: plain OMC frame)
+    strategy_version: int = 0  # per-strategy wire version (0: untagged)
 
     @property
     def is_delta(self) -> bool:
@@ -202,7 +271,15 @@ def tree_digest(tree) -> int:
     h = 0
     for parts, leaf in _flatten(tree):
         h = zlib.crc32(_path_key(parts).encode(), h)
-        if is_compressed(leaf):
+        kind = _leaf_kind(leaf)
+        if kind is not None:
+            # strategy leaves: hash the canonical wire chunks (deterministic)
+            meta, chunks = _LEAF_CODECS[kind][1](leaf, None)
+            h = zlib.crc32(json.dumps(meta, separators=(",", ":"),
+                                      sort_keys=True).encode(), h)
+            for c in chunks:
+                h = zlib.crc32(c, h)
+        elif is_compressed(leaf):
             h = zlib.crc32(np.ascontiguousarray(np.asarray(leaf.codes)).tobytes(), h)
             h = zlib.crc32(
                 np.ascontiguousarray(np.asarray(leaf.s, np.float32)).tobytes(), h
@@ -367,13 +444,20 @@ def _decode_raw(meta: Dict[str, Any], body: memoryview, off: int, base):
 # ---------------------------------------------------------------------------
 
 
-def encode_payload(tree, *, base=None, round_index: int = 0) -> bytes:
+def encode_payload(tree, *, base=None, round_index: int = 0,
+                   strategy=None) -> bytes:
     """Serialize a storage pytree to a wire payload.
 
     ``base`` (the tree the receiver already holds, e.g. the previous round's
     model) switches each leaf to sparse XOR-delta encoding when that is
     smaller; the receiver must then pass the same base to
     :func:`decode_payload`.
+
+    ``strategy`` (a :class:`repro.compress.CompressionStrategy` instance or
+    registered name) stamps the frame with the strategy tag + its wire
+    version; payloads containing registered strategy leaves are stamped
+    automatically.  Untagged frames (the plain OMC path) stay
+    byte-identical to wire version 1 payloads.
     """
     base_leaves: Dict[str, Any] = {}
     if base is not None:
@@ -382,10 +466,14 @@ def encode_payload(tree, *, base=None, round_index: int = 0) -> bytes:
     manifest: List[Dict[str, Any]] = []
     chunks: List[bytes] = []
     any_delta = False
+    kinds_seen = set()
     for parts, leaf in _flatten(tree):
         bleaf = base_leaves.get(_path_key(parts))
         if is_compressed(leaf):
             meta, ch = _encode_omc(leaf, bleaf)
+        elif (kind := _leaf_kind(leaf)) is not None:
+            meta, ch = _LEAF_CODECS[kind][1](leaf, bleaf)
+            kinds_seen.add(kind)
         else:
             meta, ch = _encode_raw(leaf, bleaf)
         any_delta |= meta["mode"] == "delta"
@@ -393,7 +481,11 @@ def encode_payload(tree, *, base=None, round_index: int = 0) -> bytes:
         manifest.append(meta)
         chunks.extend(ch)
 
-    mjson = json.dumps(dict(leaves=manifest), separators=(",", ":")).encode()
+    frame: Dict[str, Any] = dict(leaves=manifest)
+    tag = _strategy_tag(strategy, kinds_seen)
+    if tag is not None:
+        frame["strategy"], frame["strategy_version"] = tag
+    mjson = json.dumps(frame, separators=(",", ":")).encode()
     body = b"".join(chunks)
     flags = FLAG_DELTA if any_delta else 0
     digest = tree_digest(base) if any_delta else 0
@@ -403,6 +495,30 @@ def encode_payload(tree, *, base=None, round_index: int = 0) -> bytes:
         crc, digest,
     )
     return header + mjson + body
+
+
+def _strategy_tag(strategy, kinds_seen) -> Optional[Tuple[str, int]]:
+    """Resolve the frame's (strategy, wire_version) stamp, if any."""
+    if strategy is not None:
+        if isinstance(strategy, str):
+            _ensure_strategy_codecs()
+            from repro.compress import strategy_class
+
+            cls = strategy_class(strategy)
+            return cls.name, cls.wire_version
+        return strategy.name, strategy.wire_version
+    if kinds_seen:
+        if len(kinds_seen) > 1:
+            raise CodecError(
+                f"tree mixes strategy leaf kinds {sorted(kinds_seen)}; pass "
+                f"strategy= explicitly to tag the frame"
+            )
+        _ensure_strategy_codecs()
+        from repro.compress import strategy_class
+
+        cls = strategy_class(next(iter(kinds_seen)))
+        return cls.name, cls.wire_version
+    return None
 
 
 def _parse_frame(data: bytes) -> Tuple[PayloadInfo, Dict[str, Any], memoryview]:
@@ -430,6 +546,7 @@ def _parse_frame(data: bytes) -> Tuple[PayloadInfo, Dict[str, Any], memoryview]:
         leaves = manifest["leaves"]
     except Exception as e:  # malformed manifest despite valid crc framing
         raise CodecError(f"malformed manifest: {e}") from e
+    _check_strategy_tag(manifest)
     info = PayloadInfo(
         version=ver,
         flags=flags,
@@ -438,9 +555,11 @@ def _parse_frame(data: bytes) -> Tuple[PayloadInfo, Dict[str, Any], memoryview]:
         body_bytes=blen,
         total_bytes=len(data),
         num_leaves=len(leaves),
-        num_compressed=sum(1 for l in leaves if l["kind"] == "omc"),
+        num_compressed=sum(1 for l in leaves if l["kind"] != "raw"),
         num_delta=sum(1 for l in leaves if l["mode"] == "delta"),
         base_digest=digest,
+        strategy=manifest.get("strategy"),
+        strategy_version=int(manifest.get("strategy_version", 0)),
     )
     return info, manifest, mview[info.header_bytes :]
 
@@ -495,7 +614,11 @@ def decode_payload(data: bytes, *, base=None) -> Tuple[Any, PayloadInfo]:
         elif meta["kind"] == "raw":
             leaf, off = _decode_raw(meta, body, off, bleaf)
         else:
-            raise CodecError(f"unknown leaf kind {meta['kind']!r}")
+            if meta["kind"] not in _LEAF_CODECS:
+                _ensure_strategy_codecs()
+            if meta["kind"] not in _LEAF_CODECS:
+                raise CodecError(f"unknown leaf kind {meta['kind']!r}")
+            leaf, off = _LEAF_CODECS[meta["kind"]][2](meta, body, off, bleaf)
         entries.append((parts, leaf))
     if off != info.body_bytes:
         raise CodecError(f"body length mismatch: consumed {off}, have {info.body_bytes}")
@@ -506,29 +629,57 @@ def payload_bytes_report(tree) -> Dict[str, Any]:
     """Theoretical full-payload body size for a storage tree.
 
     Uses the exact accounting the store layer uses (``packed_bytes`` + 8
-    bytes of PVT scalars per entry), so for any tree
+    bytes of PVT scalars per entry for ``omc`` leaves, each strategy leaf's
+    ``wire_body_bytes`` otherwise), so for any tree
     ``payload_bytes_report(t)["wire_bytes"] ==
-    state_bytes_report(t)["packed_bytes"]`` and a serialized full payload's
-    ``body_bytes`` equals it too.
+    state_bytes_report(t)["packed_bytes"]`` (pure OMC trees) and a
+    serialized full payload's ``body_bytes`` equals it for every strategy.
+
+    ``per_strategy`` breaks the body down by leaf kind — payload bytes,
+    index bytes (positions), and metadata bytes (PVT / scale scalars) —
+    the rows wire-accounting reconciliation tests assert against
+    (DESIGN.md §11).
     """
     wire = fp32 = n_params = n_comp = 0
+    per: Dict[str, Dict[str, int]] = {}
+
+    def bucket(kind: str) -> Dict[str, int]:
+        return per.setdefault(kind, dict(
+            payload_bytes=0, index_bytes=0, meta_bytes=0,
+            num_leaves=0, num_params=0,
+        ))
+
     for _, leaf in _flatten(tree):
         if is_compressed(leaf):
             n = int(leaf.codes.size)
-            n_params += n
+            meta = _PVT_BYTES_PER_ENTRY * int(np.asarray(leaf.s).size)
+            body = packing.packed_bytes(n, leaf.fmt) + meta
             n_comp += n
-            fp32 += 4 * n
-            wire += packing.packed_bytes(n, leaf.fmt)
-            wire += _PVT_BYTES_PER_ENTRY * int(np.asarray(leaf.s).size)
+            b = bucket("omc")
+            b["meta_bytes"] += meta
+        elif (kind := _leaf_kind(leaf)) is not None:
+            n = int(np.prod(leaf.shape)) if leaf.shape else 1
+            body = int(leaf.wire_body_bytes())
+            n_comp += n
+            b = bucket(kind)
+            b["index_bytes"] += int(leaf.index_bytes())
+            b["meta_bytes"] += int(leaf.meta_bytes())
         else:
             arr = np.asarray(leaf)
-            n_params += int(arr.size)
-            fp32 += 4 * int(arr.size)
-            wire += int(arr.nbytes)
+            n = int(arr.size)
+            body = int(arr.nbytes)
+            b = bucket("raw")
+        n_params += n
+        fp32 += 4 * n
+        wire += body
+        b["payload_bytes"] += body
+        b["num_leaves"] += 1
+        b["num_params"] += n
     return dict(
         num_params=n_params,
         num_compressed=n_comp,
         fp32_bytes=fp32,
         wire_bytes=wire,
         wire_ratio=wire / max(fp32, 1),
+        per_strategy=per,
     )

@@ -1,0 +1,66 @@
+"""Pluggable transport-compression strategies (DESIGN.md §11).
+
+One interface — :class:`CompressionStrategy` — behind which the zoo lives:
+
+  * :class:`OMCQuantStrategy` — the paper's minifloat + PVT quantization,
+    delegating to ``repro.core`` unchanged (the reference point),
+  * :class:`TopKSparseStrategy` — magnitude top-k with index packing
+    (Konečný et al., arxiv 1610.05492),
+  * :class:`TernaryTNTStrategy` — 2-bit TNT/TWN ternary weights
+    (SNIPPETS.md §2–3),
+  * :class:`PipelineStrategy` — quantize → sparsify → entropy-code
+    (Grativol et al., arxiv 2310.14693).
+
+Every strategy encodes/decodes policy-selected variables to self-describing
+wire leaves that the §7 payload codec serializes (with a strategy tag +
+per-strategy wire version in the frame), exposes a traceable qdq/STE view
+for in-training use, and accounts its wire bytes exactly —
+``benchmarks/compress_pareto.py`` sweeps the zoo across model families into
+a quality-vs-wire-MB Pareto frontier.
+"""
+
+from .base import (  # noqa: F401
+    CompressionStrategy,
+    StrategyLeaf,
+    available_strategies,
+    decode_tree,
+    default_zoo,
+    encode_tree,
+    get_strategy,
+    is_encoded_leaf,
+    is_strategy_leaf,
+    qdq_tree,
+    register_strategy,
+    strategy_class,
+    tree_wire_bytes,
+)
+from .omc_quant import OMCQuantStrategy  # noqa: F401
+from .pipeline import PipelineStrategy, PipelineVariable  # noqa: F401
+from .ternary import TernaryTNTStrategy, TernaryVariable, ternarize  # noqa: F401
+from .topk import TopKSparseStrategy, TopKSparseVariable  # noqa: F401
+
+from . import wire  # noqa: F401  (registers the leaf codecs with repro.api)
+
+__all__ = [
+    "CompressionStrategy",
+    "OMCQuantStrategy",
+    "PipelineStrategy",
+    "PipelineVariable",
+    "StrategyLeaf",
+    "TernaryTNTStrategy",
+    "TernaryVariable",
+    "TopKSparseStrategy",
+    "TopKSparseVariable",
+    "available_strategies",
+    "decode_tree",
+    "default_zoo",
+    "encode_tree",
+    "get_strategy",
+    "is_encoded_leaf",
+    "is_strategy_leaf",
+    "qdq_tree",
+    "register_strategy",
+    "strategy_class",
+    "ternarize",
+    "tree_wire_bytes",
+]

@@ -1,0 +1,336 @@
+"""The ``CompressionStrategy`` interface and the strategy zoo (DESIGN.md §11).
+
+The paper's OMC quantization is one point in a wider design space: top-k
+sparsification and structured updates (Konečný et al., arxiv 1610.05492),
+ternary TNT weights (SNIPPETS.md §2–3), and stacked pipelines of
+quantization + sparsification + entropy coding (Grativol et al., arxiv
+2310.14693) all trade model quality against wire bytes along different
+curves.  This module defines the one interface they share so that the
+transport layer (``repro.api.codecs``), the byte ledgers
+(``repro.federated.accounting``), and the benchmarks can treat them
+uniformly:
+
+  * :class:`CompressionStrategy` — encode/decode one selected variable to a
+    self-describing wire leaf, a *traceable* qdq (and STE) view for
+    in-training simulation, and exact byte accounting: shape-determined
+    strategies predict their wire bytes from ``(n_elems, stack_entries)``
+    alone (:meth:`~CompressionStrategy.plan_wire_bytes`), data-dependent
+    ones (entropy coding) report ``None`` there and are measured from the
+    encoded leaf (:meth:`~CompressionStrategy.leaf_wire_bytes`).
+  * :class:`StrategyLeaf` — base class of the encoded per-variable wire
+    leaves.  Each knows how to ``dequantize()`` itself and how many body
+    bytes it serializes to (``wire_body_bytes`` — the codec must produce
+    exactly this many; tested).
+  * the registry — ``register_strategy`` / ``get_strategy`` /
+    ``available_strategies`` / ``default_zoo``.  The registered name is
+    also the payload's wire strategy tag, and ``wire_version`` is the
+    per-strategy format version ``repro.api.codecs.decode_payload`` rejects
+    on mismatch (CodecError, never silent corruption).
+
+Tree-level helpers (``encode_tree`` / ``decode_tree`` / ``qdq_tree`` /
+``tree_wire_bytes``) apply a strategy under the same weights-only selection
+policy OMC uses (``repro.core.policy`` + stacked-axis awareness from
+``repro.federated.state``), so every strategy compresses exactly the
+variables OMC would and the byte reports stay comparable.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Type
+
+import jax
+import numpy as np
+
+from repro.core.omc import OMCConfig
+from repro.core.policy import path_str
+from repro.core.store import is_compressed
+from repro.models.common import ParamSpec
+
+
+class StrategyLeaf:
+    """Base class of encoded per-variable wire leaves (non-OMC strategies).
+
+    Subclasses are plain (non-pytree) dataclasses: they live on the wire /
+    host side, like the codec's parsed frames — the traceable in-training
+    view is :meth:`CompressionStrategy.qdq_leaf`, not these objects.
+    Contract: ``dequantize()`` returns the f32 array the receiver
+    materializes; ``wire_body_bytes()`` is the exact number of body bytes
+    the §7 codec serializes for this leaf, split into ``index_bytes()``
+    (position metadata) and ``meta_bytes()`` (scales/headers) for the
+    per-strategy breakdown of ``payload_bytes_report``.
+    """
+
+    kind: str = "?"  # manifest leaf kind == strategy name
+
+    def dequantize(self) -> jax.Array:
+        raise NotImplementedError
+
+    def wire_body_bytes(self) -> int:
+        raise NotImplementedError
+
+    def index_bytes(self) -> int:
+        return 0
+
+    def meta_bytes(self) -> int:
+        return 0
+
+
+class CompressionStrategy(abc.ABC):
+    """One transport compressor: param tree <-> wire leaves, with exact bytes.
+
+    Implementations must be deterministic (same input, same encoding) and
+    lossless *as codecs*: ``decode_leaf(encode_leaf(v))`` is bit-stable
+    (encoding the decoded value again yields the identical wire leaf), even
+    though the encode step itself is lossy compression.
+    """
+
+    #: registry key AND the payload's wire strategy tag
+    name: str = "?"
+    #: per-strategy wire-format version; bumped on any layout change and
+    #: verified by ``decode_payload`` (mismatch -> CodecError)
+    wire_version: int = 1
+    #: delta rule on repeat sends: "xor-sparse" (the §7 sparse XOR-delta,
+    #: OMC's rule) or None (full-only)
+    delta_rule: Optional[str] = None
+
+    # -- per-variable codec -------------------------------------------------
+    @abc.abstractmethod
+    def encode_leaf(self, v: jax.Array, *, batch_axes: int = 0):
+        """f32 array -> wire leaf (StrategyLeaf or CompressedVariable)."""
+
+    @abc.abstractmethod
+    def decode_leaf(self, leaf) -> jax.Array:
+        """Wire leaf -> the f32 array the receiver materializes."""
+
+    # -- in-training view ---------------------------------------------------
+    @abc.abstractmethod
+    def qdq_leaf(self, v: jax.Array, *, batch_axes: int = 0) -> jax.Array:
+        """Traceable quantize->dequantize view: numerically identical to
+        ``decode_leaf(encode_leaf(v))`` but jit/vmap/grad-composable, for
+        simulation-mode training under the strategy."""
+
+    def qdq_ste_leaf(self, v: jax.Array, *, batch_axes: int = 0) -> jax.Array:
+        """qdq with a straight-through gradient (QAT-style training)."""
+        return v + jax.lax.stop_gradient(
+            self.qdq_leaf(v, batch_axes=batch_axes) - v
+        )
+
+    # -- byte accounting ----------------------------------------------------
+    @abc.abstractmethod
+    def leaf_wire_bytes(self, leaf) -> int:
+        """Exact wire body bytes of one *encoded* leaf (measured)."""
+
+    def plan_wire_bytes(self, n_elems: int, stack_entries: int) -> Optional[int]:
+        """Wire body bytes predicted from the shape alone, or None when the
+        size is data-dependent (entropy-coded strategies).  When not None it
+        MUST equal ``leaf_wire_bytes`` of any encode of that shape — this is
+        what lets :class:`repro.federated.accounting.WireTable` budget a
+        round without materializing payloads."""
+        return None
+
+    def describe(self) -> Dict[str, Any]:
+        """Identification row for benchmark artifacts and reports."""
+        return dict(strategy=self.name, wire_version=self.wire_version,
+                    label=self.label)
+
+    @property
+    def label(self) -> str:
+        """Human-readable point label (subclasses append their params)."""
+        return self.name
+
+
+# ---------------------------------------------------------------------------
+# registry — the strategy zoo
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Type[CompressionStrategy]] = {}
+
+
+def register_strategy(cls: Type[CompressionStrategy]) -> Type[CompressionStrategy]:
+    """Class decorator: add a strategy to the zoo under ``cls.name``."""
+    if not cls.name or cls.name == "?":
+        raise ValueError(f"{cls.__name__} must declare a registry name")
+    if not isinstance(cls.wire_version, int) or cls.wire_version < 1:
+        raise ValueError(f"{cls.__name__} must declare wire_version >= 1")
+    prev = _REGISTRY.get(cls.name)
+    if prev is not None and prev is not cls:
+        raise ValueError(f"strategy name {cls.name!r} already registered")
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def get_strategy(name: str, **params) -> CompressionStrategy:
+    """Instantiate a registered strategy by name."""
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown compression strategy {name!r}; "
+            f"registered: {sorted(_REGISTRY)}"
+        )
+    return _REGISTRY[name](**params)
+
+
+def strategy_class(name: str) -> Type[CompressionStrategy]:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown compression strategy {name!r}")
+    return _REGISTRY[name]
+
+
+def available_strategies() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def default_zoo() -> List[CompressionStrategy]:
+    """The benchmark sweep's default strategy instances (one per family)."""
+    from .omc_quant import OMCQuantStrategy
+    from .pipeline import PipelineStrategy
+    from .ternary import TernaryTNTStrategy
+    from .topk import TopKSparseStrategy
+
+    return [
+        OMCQuantStrategy(),                    # the paper's S1E3M7 + PVT
+        OMCQuantStrategy.parse("S1E4M3"),      # aggressive 8-bit minifloat
+        TopKSparseStrategy(density=0.1),
+        TernaryTNTStrategy(),
+        PipelineStrategy(),                    # quant -> top-k -> DEFLATE
+    ]
+
+
+def is_strategy_leaf(x: Any) -> bool:
+    return isinstance(x, StrategyLeaf)
+
+
+def is_encoded_leaf(x: Any) -> bool:
+    """True for any wire leaf: OMC ``CompressedVariable`` or StrategyLeaf."""
+    return is_compressed(x) or isinstance(x, StrategyLeaf)
+
+
+# ---------------------------------------------------------------------------
+# tree-level application under the OMC selection policy
+# ---------------------------------------------------------------------------
+
+
+def _selected(omc: OMCConfig, path: str, spec, leaf) -> bool:
+    # stacked-axis-aware weights-only policy; one canonical implementation
+    from repro.federated.state import selected
+
+    return selected(omc, path, spec, leaf)
+
+
+def _n_stack_axes(spec, leaf) -> int:
+    from repro.federated.state import n_stack_axes
+
+    return n_stack_axes(spec, leaf)
+
+
+def _map_selected(fn, params, omc: OMCConfig, specs=None):
+    if specs is None:
+        # policy-only selection (no stacked-axis info): batch_axes = 0
+        def f(path, leaf):
+            if omc.enabled and omc.policy.selects(path_str(path), leaf):
+                return fn(leaf, 0)
+            return leaf
+
+        return jax.tree_util.tree_map_with_path(f, params)
+
+    def g(path, spec, leaf):
+        if _selected(omc, path_str(path), spec, leaf):
+            return fn(leaf, _n_stack_axes(spec, leaf))
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(
+        g, specs, params, is_leaf=lambda s: isinstance(s, ParamSpec)
+    )
+
+
+def encode_tree(strategy: CompressionStrategy, params, omc: OMCConfig,
+                specs=None):
+    """f32 tree -> wire tree: policy-selected leaves encoded under
+    ``strategy``, everything else passed through (travels raw f32).
+
+    ``omc`` supplies the *selection policy* (weights-only, exclusions) —
+    the strategy replaces only the transport representation, so every
+    strategy compresses the same variables and byte reports compare
+    like-for-like.  ``specs`` (the family's ParamSpec tree) enables
+    stacked-axis-aware selection and per-entry scales, exactly as
+    :func:`repro.federated.state.compress_params` does for OMC.
+    """
+    return _map_selected(
+        lambda leaf, ax: strategy.encode_leaf(leaf, batch_axes=ax),
+        params, omc, specs,
+    )
+
+
+def decode_tree(tree):
+    """Wire tree -> f32 tree (every encoded leaf dequantized)."""
+    return jax.tree_util.tree_map(
+        lambda x: x.dequantize() if is_encoded_leaf(x) else x,
+        tree,
+        is_leaf=is_encoded_leaf,
+    )
+
+
+def qdq_tree(strategy: CompressionStrategy, params, omc: OMCConfig,
+             specs=None):
+    """Traceable quantize->dequantize view of the whole tree — the
+    simulation-mode counterpart of ``decode_tree(encode_tree(...))``."""
+    return _map_selected(
+        lambda leaf, ax: strategy.qdq_leaf(leaf, batch_axes=ax),
+        params, omc, specs,
+    )
+
+
+def tree_wire_bytes(tree) -> Dict[str, Any]:
+    """Exact wire body bytes of an encoded tree, split per strategy kind.
+
+    Returns the same totals a serialized full payload's body measures and
+    the same per-kind split :func:`repro.api.codecs.payload_bytes_report`
+    reports (reconciliation tested): ``wire_bytes`` is the sum over leaves
+    of their exact body size; ``per_strategy[kind]`` carries payload bytes
+    plus the index/metadata overhead split.
+    """
+    from repro.core import packing
+
+    total = dict(wire_bytes=0, fp32_bytes=0, num_params=0)
+    per: Dict[str, Dict[str, int]] = {}
+
+    def bucket(kind):
+        return per.setdefault(kind, dict(
+            payload_bytes=0, index_bytes=0, meta_bytes=0,
+            num_leaves=0, num_params=0,
+        ))
+
+    for leaf in jax.tree_util.tree_leaves(tree, is_leaf=is_encoded_leaf):
+        if is_compressed(leaf):
+            n = int(leaf.codes.size)
+            meta = 8 * int(np.asarray(leaf.s).size)
+            body = packing.packed_bytes(n, leaf.fmt) + meta
+            b = bucket("omc")
+            b["payload_bytes"] += body
+            b["meta_bytes"] += meta
+            b["num_leaves"] += 1
+            b["num_params"] += n
+        elif isinstance(leaf, StrategyLeaf):
+            n = int(np.prod(leaf.shape)) if leaf.shape else 1
+            body = leaf.wire_body_bytes()
+            b = bucket(leaf.kind)
+            b["payload_bytes"] += body
+            b["index_bytes"] += leaf.index_bytes()
+            b["meta_bytes"] += leaf.meta_bytes()
+            b["num_leaves"] += 1
+            b["num_params"] += n
+        else:
+            arr = np.asarray(leaf)
+            n = int(arr.size)
+            body = int(arr.nbytes)
+            b = bucket("raw")
+            b["payload_bytes"] += body
+            b["num_leaves"] += 1
+            b["num_params"] += n
+        total["wire_bytes"] += body
+        total["fp32_bytes"] += 4 * n
+        total["num_params"] += n
+    total["wire_ratio"] = total["wire_bytes"] / max(total["fp32_bytes"], 1)
+    total["per_strategy"] = per
+    return total

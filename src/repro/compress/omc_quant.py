@@ -1,0 +1,89 @@
+"""The paper's OMC quantization as a ``CompressionStrategy`` (DESIGN.md §11).
+
+A thin adapter: encode/decode delegate to the existing
+``repro.core.store.compress_variable`` / ``CompressedVariable.dequantize``
+path *unchanged* — same minifloat codec, same PVT solvers, same
+``packed_bytes + 8 B·(s, b)`` wire size — so the strategy interface costs
+the OMC path nothing.  The cross-strategy equivalence gate
+(``tests/test_compress.py``) asserts this adapter reproduces the
+loop/engine byte accounting byte-exactly and the stored codes bit-exactly.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.core import packing
+from repro.core.formats import FloatFormat, value_quantize
+from repro.core.pvt import pvt_apply, pvt_solve, pvt_solve_fast
+from repro.core.store import CompressedVariable, compress_variable, is_compressed
+
+from .base import CompressionStrategy, register_strategy
+
+_PVT_BYTES_PER_ENTRY = 8  # s and b, f32 each — matches store/codec/accounting
+
+
+@register_strategy
+@dataclasses.dataclass(frozen=True)
+class OMCQuantStrategy(CompressionStrategy):
+    """Minifloat quantization with per-variable transformation (paper §2).
+
+    ``fast=True`` selects the distributed-friendly PVT solver — the one
+    ``repro.federated.state.compress_params`` uses — so strategy encodes
+    are bit-identical to the federated storage path.  The wire leaf is the
+    ordinary :class:`CompressedVariable`; its delta rule on repeat sends is
+    the §7 sparse XOR-delta.
+    """
+
+    fmt: FloatFormat = FloatFormat(3, 7)  # S1E3M7, the paper's 11-bit format
+    pvt: bool = True
+    fast: bool = True
+
+    name = "omc"
+    wire_version = 1
+    delta_rule = "xor-sparse"
+
+    @classmethod
+    def parse(cls, fmt: str, **kw) -> "OMCQuantStrategy":
+        return cls(fmt=FloatFormat.parse(fmt), **kw)
+
+    @property
+    def label(self) -> str:
+        return f"omc-{self.fmt.name.lower()}" + ("" if self.pvt else "-nopvt")
+
+    def encode_leaf(self, v, *, batch_axes: int = 0) -> CompressedVariable:
+        return compress_variable(
+            v, self.fmt, pvt=self.pvt, batch_axes=batch_axes, fast=self.fast
+        )
+
+    def decode_leaf(self, leaf: CompressedVariable) -> jax.Array:
+        return leaf.dequantize()
+
+    def qdq_leaf(self, v, *, batch_axes: int = 0) -> jax.Array:
+        vq = value_quantize(v, self.fmt)
+        if not self.pvt:
+            return vq
+        if batch_axes or self.fast:
+            s, b = pvt_solve_fast(v, vq, batch_axes)
+        else:
+            s, b = pvt_solve(v, vq)
+        return pvt_apply(vq, s, b)
+
+    def leaf_wire_bytes(self, leaf: CompressedVariable) -> int:
+        if not is_compressed(leaf):
+            raise TypeError(f"expected CompressedVariable, got {type(leaf)}")
+        n = int(leaf.codes.size)
+        return (packing.packed_bytes(n, leaf.fmt)
+                + _PVT_BYTES_PER_ENTRY * int(np.asarray(leaf.s).size))
+
+    def plan_wire_bytes(self, n_elems: int, stack_entries: int) -> int:
+        sb = stack_entries if self.pvt else 1
+        return packing.packed_bytes(n_elems, self.fmt) + _PVT_BYTES_PER_ENTRY * sb
+
+    def describe(self):
+        d = super().describe()
+        d.update(fmt=self.fmt.name, pvt=self.pvt)
+        return d

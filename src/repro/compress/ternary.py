@@ -1,0 +1,113 @@
+"""Ternary TNT weight strategy (SNIPPETS.md §2–3; Zhang & Zhu's
+"Target Non-retraining Ternary" quantization, the TWN closed form).
+
+Each selected variable collapses to ``w ≈ scale · t`` with
+``t ∈ {-1, 0, +1}``: threshold ``Δ = 0.7·mean(|v|)``, ``t = sign(v)`` where
+``|v| > Δ`` else 0, and ``scale`` the L2-optimal mean magnitude of the
+surviving entries.  Stacked variables (scan layers / experts) get one
+``(Δ, scale)`` per stacked entry, mirroring OMC's per-variable PVT scalars.
+
+The wire form is 2 bits/param: codes ``{0, 1, 2}`` (for −1, 0, +1) through
+the exact-width bit packer, plus one f32 scale per stacked entry — the
+cheapest point of the zoo (16x vs f32), at the largest quality cost.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing
+
+from .base import CompressionStrategy, StrategyLeaf, register_strategy
+
+_TERNARY_BITS = 2
+
+
+def ternarize(v: jax.Array, batch_axes: int = 0, threshold_factor: float = 0.7):
+    """(t, scale): t ∈ {-1, 0, +1} same shape as v, scale per stacked entry.
+
+    Traceable — this single function backs both the wire encode and the
+    in-training qdq view, so the two can never disagree.
+    """
+    v = jnp.asarray(v, jnp.float32)
+    axes = tuple(range(batch_axes, v.ndim))
+    mag = jnp.abs(v)
+    delta = threshold_factor * jnp.mean(mag, axis=axes, keepdims=True)
+    mask = mag > delta
+    kept = jnp.sum(jnp.where(mask, mag, 0.0), axis=axes, keepdims=True)
+    count = jnp.sum(mask, axis=axes, keepdims=True).astype(jnp.float32)
+    scale = kept / jnp.maximum(count, 1.0)
+    t = jnp.where(mask, jnp.sign(v), 0.0)
+    return t, jnp.squeeze(scale, axis=axes)
+
+
+@dataclasses.dataclass
+class TernaryVariable(StrategyLeaf):
+    """One variable as 2-bit ternary codes + per-stacked-entry scale."""
+
+    codes: np.ndarray  # u8, original shape, values in {0, 1, 2}
+    scale: np.ndarray  # f32, shape = leading batch_axes of codes
+    shape: Tuple[int, ...]
+
+    kind = "ternary"
+
+    def dequantize(self) -> jax.Array:
+        t = np.asarray(self.codes, np.float32) - 1.0
+        scale = np.asarray(self.scale, np.float32)
+        bshape = scale.shape + (1,) * (len(self.shape) - scale.ndim)
+        return jnp.asarray(t * scale.reshape(bshape))
+
+    def wire_body_bytes(self) -> int:
+        n = int(np.prod(self.shape)) if self.shape else 1
+        return packing.packed_bytes_width(n, _TERNARY_BITS) + self.meta_bytes()
+
+    def meta_bytes(self) -> int:
+        return 4 * int(np.asarray(self.scale).size)
+
+
+@register_strategy
+@dataclasses.dataclass(frozen=True)
+class TernaryTNTStrategy(CompressionStrategy):
+    """TNT/TWN ternary weights: 2-bit codes + one scale per stacked entry."""
+
+    threshold_factor: float = 0.7  # the TWN Δ = 0.7·E|v| heuristic
+
+    name = "ternary"
+    wire_version = 1
+    delta_rule = None
+
+    @property
+    def label(self) -> str:
+        return "ternary-tnt"
+
+    def encode_leaf(self, v, *, batch_axes: int = 0) -> TernaryVariable:
+        t, scale = ternarize(v, batch_axes, self.threshold_factor)
+        codes = np.asarray(t + 1.0, np.uint8)
+        return TernaryVariable(
+            codes, np.asarray(scale, np.float32), tuple(np.shape(v))
+        )
+
+    def decode_leaf(self, leaf: TernaryVariable) -> jax.Array:
+        return leaf.dequantize()
+
+    def qdq_leaf(self, v, *, batch_axes: int = 0) -> jax.Array:
+        t, scale = ternarize(v, batch_axes, self.threshold_factor)
+        bshape = scale.shape + (1,) * (t.ndim - scale.ndim)
+        return t * jnp.reshape(scale, bshape)
+
+    def leaf_wire_bytes(self, leaf: TernaryVariable) -> int:
+        return leaf.wire_body_bytes()
+
+    def plan_wire_bytes(self, n_elems: int, stack_entries: int) -> int:
+        return (packing.packed_bytes_width(n_elems, _TERNARY_BITS)
+                + 4 * stack_entries)
+
+    def describe(self):
+        d = super().describe()
+        d.update(threshold_factor=self.threshold_factor)
+        return d

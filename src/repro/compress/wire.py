@@ -1,0 +1,130 @@
+"""Per-strategy leaf codecs for the §7 wire frame (DESIGN.md §11).
+
+``repro.api.codecs`` owns the frame (header, manifest, crc, delta
+verification) and ships the two built-in leaf kinds (``omc``, ``raw``);
+this module registers the zoo's additional kinds — ``topk``, ``ternary``,
+``pipeline`` — so strategy-encoded trees travel through the exact same
+``encode_payload`` / ``decode_payload`` path, strategy tag and all.
+
+Byte contract: each kind's body section is exactly
+``StrategyLeaf.wire_body_bytes()`` bytes — the number every ledger
+(``compress.tree_wire_bytes``, ``codecs.payload_bytes_report``,
+``accounting.WireTable``) reports — so wire measurements reconcile with
+planned budgets to the byte (tested in ``tests/test_compress.py``).
+
+None of these kinds defines a delta rule: the §7 sparse XOR-delta is the
+OMC strategy's delta (codes are positionally stable round-over-round);
+top-k/pipeline support sets move every send and ternary re-sends cost 2
+bits/param anyway, so they always travel full.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Tuple
+
+import numpy as np
+
+from repro.api import codecs
+from repro.core import packing
+from repro.core.formats import FloatFormat
+
+from .pipeline import PipelineVariable
+from .ternary import _TERNARY_BITS, TernaryVariable
+from .topk import TopKSparseVariable
+
+
+def _encode_topk(leaf: TopKSparseVariable, base) -> Tuple[Dict[str, Any], List[bytes]]:
+    meta = dict(
+        kind="topk",
+        shape=list(leaf.shape),
+        k=leaf.k,
+        vfmt=leaf.value_fmt.name,
+        mode="full",
+    )
+    idx = np.ascontiguousarray(np.asarray(leaf.idx, np.uint32))
+    if leaf.value_fmt.is_identity:
+        vals = np.ascontiguousarray(np.asarray(leaf.values, np.float32))
+    else:
+        vals = np.ascontiguousarray(np.asarray(leaf.values, np.uint32))
+    return meta, [idx.tobytes(), vals.tobytes()]
+
+
+def _decode_topk(meta: Dict[str, Any], body: memoryview, off: int, base):
+    fmt = FloatFormat.parse(meta["vfmt"])
+    k = int(meta["k"])
+    idx = np.frombuffer(body, np.uint32, k, off).copy()
+    off += 4 * k
+    if fmt.is_identity:
+        vals = np.frombuffer(body, np.float32, k, off).copy()
+        off += 4 * k
+    else:
+        nwords = packing.packed_words(k, fmt.bits)
+        vals = np.frombuffer(body, np.uint32, nwords, off).copy()
+        off += 4 * nwords
+    return TopKSparseVariable(idx, vals, tuple(meta["shape"]), fmt), off
+
+
+def _encode_ternary(leaf: TernaryVariable, base) -> Tuple[Dict[str, Any], List[bytes]]:
+    scale = np.ascontiguousarray(np.asarray(leaf.scale, np.float32))
+    meta = dict(
+        kind="ternary",
+        shape=list(leaf.shape),
+        sb_shape=list(scale.shape),
+        mode="full",
+    )
+    words = np.asarray(
+        packing.pack(np.asarray(leaf.codes).reshape(-1), _TERNARY_BITS),
+        np.uint32,
+    )
+    return meta, [words.tobytes(), scale.tobytes()]
+
+
+def _decode_ternary(meta: Dict[str, Any], body: memoryview, off: int, base):
+    shape = tuple(meta["shape"])
+    sb_shape = tuple(meta["sb_shape"])
+    n = int(np.prod(shape)) if shape else 1
+    n_sb = int(np.prod(sb_shape)) if sb_shape else 1
+    nwords = packing.packed_words(n, _TERNARY_BITS)
+    words = np.frombuffer(body, np.uint32, nwords, off)
+    off += 4 * nwords
+    scale = np.frombuffer(body, np.float32, n_sb, off).reshape(sb_shape).copy()
+    off += 4 * n_sb
+    codes = np.asarray(
+        packing.unpack(words, _TERNARY_BITS, n), np.uint8
+    ).reshape(shape)
+    return TernaryVariable(codes, scale, shape), off
+
+
+def _encode_pipeline(leaf: PipelineVariable, base) -> Tuple[Dict[str, Any], List[bytes]]:
+    meta = dict(
+        kind="pipeline",
+        shape=list(leaf.shape),
+        k=int(leaf.k),
+        fmt=leaf.fmt.name,
+        blen=len(leaf.blob),
+        mode="full",
+    )
+    return meta, [leaf.blob]
+
+
+def _decode_pipeline(meta: Dict[str, Any], body: memoryview, off: int, base):
+    blen = int(meta["blen"])
+    blob = bytes(body[off:off + blen])
+    if len(blob) != blen:
+        raise codecs.CodecError("pipeline blob truncated")
+    off += blen
+    return PipelineVariable(
+        blob, int(meta["k"]), tuple(meta["shape"]), FloatFormat.parse(meta["fmt"])
+    ), off
+
+
+def register() -> None:
+    codecs.register_leaf_codec("topk", TopKSparseVariable,
+                               _encode_topk, _decode_topk)
+    codecs.register_leaf_codec("ternary", TernaryVariable,
+                               _encode_ternary, _decode_ternary)
+    codecs.register_leaf_codec("pipeline", PipelineVariable,
+                               _encode_pipeline, _decode_pipeline)
+
+
+register()

@@ -59,6 +59,14 @@ class OMCConfig:
     def ppq_key(self) -> jax.Array:
         return jax.random.PRNGKey(self.ppq_seed)
 
+    def strategy(self):
+        """This config as a zoo :class:`repro.compress.OMCQuantStrategy` —
+        the pluggable-strategy view of the paper's path (DESIGN.md §11).
+        Lazy import: ``core`` stays importable without the zoo."""
+        from repro.compress import OMCQuantStrategy
+
+        return OMCQuantStrategy(fmt=self.fmt, pvt=self.pvt)
+
 
 def qdq_pvt_leaf(v: jax.Array, cfg: OMCConfig) -> jax.Array:
     """quantize→dequantize one variable with optional PVT correction."""

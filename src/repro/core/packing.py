@@ -59,3 +59,9 @@ def unpack(words: jax.Array, width: int, n: int) -> jax.Array:
 def packed_bytes(n: int, fmt: FloatFormat) -> int:
     """Exact wire bytes for ``n`` values of ``fmt`` (uint32-word granularity)."""
     return 4 * packed_words(n, fmt.bits)
+
+
+def packed_bytes_width(n: int, width: int) -> int:
+    """Exact wire bytes for ``n`` values of an arbitrary bit width (e.g. the
+    2-bit ternary codes of ``repro.compress.ternary``)."""
+    return 4 * packed_words(n, width)

@@ -5,6 +5,12 @@ weight matrices of matmul-bearing layers (>=99.8% of Conformer parameters) are
 robust.  The default policy therefore selects leaves with ndim >= 2 (weight
 matrices, embedding tables, conv kernels) and excludes everything matching an
 exclusion regex (used e.g. for RG-LRU recurrence parameters, see DESIGN.md §6).
+
+The policy is shared by every transport compressor in the strategy zoo
+(DESIGN.md §11): ``repro.compress.encode_tree`` applies any
+``CompressionStrategy`` under this same selection, so top-k / ternary /
+pipeline payloads compress exactly the variables OMC would and the
+quality-vs-wire-bytes comparisons stay like-for-like.
 """
 
 from __future__ import annotations

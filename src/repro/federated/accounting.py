@@ -17,6 +17,17 @@ wire codec produces, so for any storage tree the table reconciles exactly
 with :func:`repro.api.codecs.payload_bytes_report` and with the body of a
 serialized full payload (tested in ``tests/test_engine.py``).
 
+Compression strategies (DESIGN.md §11): the same table rows budget any
+*shape-determined* strategy from the zoo through
+:meth:`WireTable.download_bytes_strategy` /
+:meth:`WireTable.upload_bytes_strategy` — per-variable bytes come from
+``strategy.plan_wire_bytes(n_elems, stack_entries)``, which the §11
+contract obliges to match the serialized body to the byte.
+Data-dependent strategies (entropy-coded pipelines) return ``None`` there
+and must be measured from an encoded tree via
+:func:`repro.compress.tree_wire_bytes` instead; these methods reject them
+loudly rather than guessing.
+
 The reference loop (:mod:`repro.federated.simulate`) computes uploads one
 scalar ``ppq_mask`` at a time; the vectorized engine
 (:mod:`repro.federated.engine`) uses ``ppq_masks_batch`` over the whole
@@ -26,7 +37,7 @@ cohort.  The engine equivalence test asserts the two agree to the byte.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import numpy as np
@@ -93,6 +104,44 @@ class WireTable:
                 f"mask has shape {m.shape}, expected ({self.num_vars},)"
             )
         sizes = np.where(m, self._packed(omc), self._fp32_vars())
+        return int(sizes.sum()) + self.raw_bytes
+
+    # -- strategy-generic budgeting (DESIGN.md §11) -------------------------
+
+    def strategy_var_bytes(self, strategy) -> np.ndarray:
+        """int64[V]: per-variable wire bytes under a zoo strategy.
+
+        Uses ``strategy.plan_wire_bytes`` — exact for shape-determined
+        strategies (the §11 contract); raises for data-dependent ones
+        (measure those with :func:`repro.compress.tree_wire_bytes`)."""
+        rows = [
+            strategy.plan_wire_bytes(n, sb)
+            for n, sb in zip(self.n_elems, self.stack_entries)
+        ]
+        if any(r is None for r in rows):
+            raise ValueError(
+                f"strategy {strategy.name!r} has data-dependent wire bytes; "
+                f"measure an encoded tree with repro.compress.tree_wire_bytes"
+            )
+        return np.asarray(rows, np.int64)
+
+    def download_bytes_strategy(self, strategy) -> int:
+        """Full-model download bytes with every selected var under
+        ``strategy`` (equals ``download_bytes(omc)`` for the OMC strategy —
+        byte-exact, tested)."""
+        return int(self.strategy_var_bytes(strategy).sum()) + self.raw_bytes
+
+    def upload_bytes_strategy(self, strategy, mask=None) -> int:
+        """Upload bytes under ``strategy``; an optional PPQ-style ``mask``
+        sends masked-out variables f32 (OMC transport semantics)."""
+        sizes = self.strategy_var_bytes(strategy)
+        if mask is not None:
+            m = np.asarray(mask, bool)
+            if m.shape != (self.num_vars,):
+                raise ValueError(
+                    f"mask has shape {m.shape}, expected ({self.num_vars},)"
+                )
+            sizes = np.where(m, sizes, self._fp32_vars())
         return int(sizes.sum()) + self.raw_bytes
 
 
@@ -168,9 +217,16 @@ class AsyncWireStats:
     async totals reconcile byte-exactly with
     :func:`repro.api.codecs.payload_bytes_report` (tested in
     ``tests/test_async_engine.py``).
+
+    ``strategy`` switches the ledger to a zoo strategy's wire sizes
+    (DESIGN.md §11): downloads and uploads are then budgeted through the
+    table's ``*_bytes_strategy`` rows (PPQ masks don't apply — the mask
+    machinery is the OMC strategy's transport rule) and stay byte-exact
+    against that strategy's serialized payloads.
     """
 
     table: WireTable
+    strategy: Optional[Any] = None
     down_bytes: int = 0
     up_bytes: int = 0  # arrived fresh (staleness == 0), counted in up_bytes
     stale_up_bytes: int = 0  # arrived with staleness > 0 (subset of up_bytes)
@@ -183,14 +239,24 @@ class AsyncWireStats:
     n_dropped: int = 0
     _pending: dict = dataclasses.field(default_factory=dict, repr=False)
 
+    def _down(self, omc: OMCConfig) -> int:
+        if self.strategy is not None:
+            return self.table.download_bytes_strategy(self.strategy)
+        return self.table.download_bytes(omc)
+
+    def _up(self, omc: OMCConfig, round_index: int, client_id: int) -> int:
+        if self.strategy is not None:
+            return self.table.upload_bytes_strategy(self.strategy)
+        return client_upload_bytes(self.table, omc, round_index, client_id)
+
     def start_round(self, omc: OMCConfig, round_index: int,
                     client_id: int) -> None:
         """Client checked in: full download now, upload bytes committed.
 
         ``round_index`` is the client's own round counter (it keys the
         PPQ/transport mask), not the server version."""
-        down = self.table.download_bytes(omc)
-        up = client_upload_bytes(self.table, omc, round_index, client_id)
+        down = self._down(omc)
+        up = self._up(omc, round_index, client_id)
         self.down_bytes += down
         self.n_downloads += 1
         self._pending[client_id] = down + up
@@ -201,7 +267,7 @@ class AsyncWireStats:
     def finish_round(self, omc: OMCConfig, round_index: int, client_id: int,
                      staleness: int, dropped: bool = False) -> int:
         """Client's upload arrived; returns its wire bytes."""
-        up = client_upload_bytes(self.table, omc, round_index, client_id)
+        up = self._up(omc, round_index, client_id)
         self.in_flight_bytes -= self._pending.pop(client_id)
         if dropped:
             self.dropped_up_bytes += up

@@ -1,0 +1,302 @@
+"""Strategy zoo: roundtrips, byte accounting, version gates (DESIGN.md §11).
+
+Four contracts under test:
+  * every zoo strategy round-trips bit-exactly through the §7 wire codec,
+    with its traceable qdq view numerically identical to decode∘encode;
+  * byte accounting reconciles three ways — ``tree_wire_bytes`` ==
+    serialized payload body == ``payload_bytes_report`` (and, for
+    shape-determined strategies, the per-leaf ``plan_wire_bytes``);
+  * wire-format versioning: a payload carrying a strategy tag whose
+    ``wire_version`` differs from the local zoo's is rejected with a
+    ``CodecError`` — never silently decoded;
+  * the cross-strategy equivalence gate: ``OMCQuantStrategy`` reproduces
+    the existing loop path (``federated.state.compress_params`` storage,
+    ``WireTable`` ledgers, ``run_training`` wire history) bit- and
+    byte-exactly, so the zoo refactor cannot drift the paper's numbers.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_stub import given, settings, st
+
+from repro import compress
+from repro.api import codecs
+from repro.api.codecs import CodecError
+from repro.core.omc import OMCConfig
+from repro.core.store import decompress_tree, is_compressed
+from repro.data.synthetic import make_frame_task
+from repro.federated import accounting, simulate
+from repro.federated.cohort import CohortPlan
+from repro.federated.state import compress_params
+from repro.models import conformer as cf
+
+OMC = OMCConfig.parse("S1E3M7")
+ZOO = compress.default_zoo()
+ZOO_IDS = [s.label for s in ZOO]
+
+
+def _tree(seed=0):
+    """Two policy-selected matrices + one raw (too small / 1-D) leaf."""
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.normal(size=(32, 24)), jnp.float32),
+        "emb": jnp.asarray(rng.normal(size=(40, 16)), jnp.float32),
+        "bias": jnp.asarray(rng.normal(size=(8,)), jnp.float32),
+    }
+
+
+def _leaves(tree):
+    return {k: np.asarray(v) for k, v in compress.decode_tree(tree).items()}
+
+
+# ---------------------------------------------------------------------------
+# per-strategy roundtrips
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", ZOO, ids=ZOO_IDS)
+def test_wire_roundtrip_bit_exact(strategy):
+    params = _tree()
+    tree = compress.encode_tree(strategy, params, OMC)
+    payload = codecs.encode_payload(tree, strategy=strategy)
+    info = codecs.peek_payload(payload)
+    assert info.strategy == strategy.name
+    assert info.strategy_version == strategy.wire_version
+
+    decoded, dinfo = codecs.decode_payload(payload)
+    assert dinfo.strategy == strategy.name
+    assert codecs.tree_digest(decoded) == codecs.tree_digest(tree)
+    a, b = _leaves(tree), _leaves(decoded)
+    for k in params:
+        assert np.array_equal(a[k], b[k]), k
+    # the unselected leaf travels raw and untouched
+    assert np.array_equal(b["bias"], np.asarray(params["bias"]))
+
+
+@pytest.mark.parametrize("strategy", ZOO, ids=ZOO_IDS)
+def test_qdq_matches_decode(strategy):
+    params = _tree(seed=1)
+    via_wire = _leaves(compress.encode_tree(strategy, params, OMC))
+    via_qdq = {k: np.asarray(v)
+               for k, v in compress.qdq_tree(strategy, params, OMC).items()}
+    for k in params:
+        assert np.array_equal(via_wire[k], via_qdq[k]), k
+
+
+@pytest.mark.parametrize("strategy", ZOO, ids=ZOO_IDS)
+def test_qdq_ste_gradient_is_straight_through(strategy):
+    v = jnp.asarray(np.random.default_rng(2).normal(size=(24, 16)),
+                    jnp.float32)
+    g = jax.grad(lambda x: jnp.sum(strategy.qdq_ste_leaf(x)))(v)
+    assert np.allclose(np.asarray(g), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# byte accounting
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", ZOO, ids=ZOO_IDS)
+def test_bytes_reconcile_three_ways(strategy):
+    params = _tree(seed=3)
+    tree = compress.encode_tree(strategy, params, OMC)
+    twb = compress.tree_wire_bytes(tree)
+    rep = codecs.payload_bytes_report(tree)
+    info = codecs.peek_payload(codecs.encode_payload(tree, strategy=strategy))
+    assert twb["wire_bytes"] == rep["wire_bytes"] == info.body_bytes
+    # the per-kind split sums back to the total
+    assert sum(b["payload_bytes"] for b in twb["per_strategy"].values()) \
+        == twb["wire_bytes"]
+    assert set(rep["per_strategy"]) == set(twb["per_strategy"])
+    for kind, b in twb["per_strategy"].items():
+        r = rep["per_strategy"][kind]
+        for key in ("payload_bytes", "index_bytes", "meta_bytes",
+                    "num_leaves", "num_params"):
+            assert r[key] == b[key], (kind, key)
+
+
+@pytest.mark.parametrize("strategy", ZOO, ids=ZOO_IDS)
+def test_plan_matches_measured(strategy):
+    """Shape-determined strategies must predict exactly what they encode."""
+    v = jnp.asarray(np.random.default_rng(4).normal(size=(20, 24)),
+                    jnp.float32)
+    leaf = strategy.encode_leaf(v)
+    measured = strategy.leaf_wire_bytes(leaf)
+    plan = strategy.plan_wire_bytes(v.size, 1)
+    if plan is None:  # data-dependent (entropy-coded): measured only
+        assert strategy.name == "pipeline"
+    else:
+        assert plan == measured
+
+
+def test_topk_overhead_split():
+    s = next(z for z in ZOO if z.name == "topk")
+    tree = compress.encode_tree(s, _tree(), OMC)
+    b = compress.tree_wire_bytes(tree)["per_strategy"]["topk"]
+    assert b["index_bytes"] > 0
+    assert b["payload_bytes"] > b["index_bytes"]
+
+
+def test_ternary_meta_split():
+    s = next(z for z in ZOO if z.name == "ternary")
+    tree = compress.encode_tree(s, _tree(), OMC)
+    b = compress.tree_wire_bytes(tree)["per_strategy"]["ternary"]
+    assert b["meta_bytes"] == 4 * 2  # one f32 scale per selected matrix
+
+
+# ---------------------------------------------------------------------------
+# wire-format versioning (tier-1: mismatch -> CodecError, never corruption)
+# ---------------------------------------------------------------------------
+
+
+def test_zoo_declares_wire_versions():
+    for name in compress.available_strategies():
+        cls = compress.strategy_class(name)
+        assert isinstance(cls.wire_version, int) and cls.wire_version >= 1
+        assert cls.name == name
+
+
+@pytest.mark.parametrize("strategy", ZOO, ids=ZOO_IDS)
+def test_wire_version_mismatch_rejected(strategy, monkeypatch):
+    tree = compress.encode_tree(strategy, _tree(), OMC)
+    payload = codecs.encode_payload(tree, strategy=strategy)
+    monkeypatch.setattr(type(strategy), "wire_version",
+                        strategy.wire_version + 1)
+    with pytest.raises(CodecError, match="wire version mismatch"):
+        codecs.decode_payload(payload)
+    with pytest.raises(CodecError, match="wire version mismatch"):
+        codecs.peek_payload(payload)
+
+
+def test_unknown_strategy_tag_rejected(monkeypatch):
+    s = next(z for z in ZOO if z.name == "topk")
+    payload = codecs.encode_payload(compress.encode_tree(s, _tree(), OMC),
+                                    strategy=s)
+    from repro.compress import base
+
+    monkeypatch.delitem(base._REGISTRY, "topk")
+    with pytest.raises(CodecError, match="unknown compression strategy"):
+        codecs.decode_payload(payload)
+
+
+def test_registry_lookup():
+    assert set(compress.available_strategies()) >= {
+        "omc", "topk", "ternary", "pipeline"
+    }
+    assert compress.get_strategy("topk", density=0.25).density == 0.25
+    with pytest.raises(KeyError):
+        compress.get_strategy("nope")
+
+
+# ---------------------------------------------------------------------------
+# property tests (skip cleanly when hypothesis is absent)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(257, 800),
+       st.floats(0.02, 0.5))
+def test_topk_keeps_the_k_largest(seed, n, density):
+    from repro.compress.topk import TopKSparseStrategy, num_kept
+
+    rng = np.random.default_rng(seed)
+    # distinct integer magnitudes: the top-k set is unambiguous
+    mag = rng.permutation(np.arange(1, n + 1)).astype(np.float32)
+    v = mag * rng.choice(np.asarray([-1.0, 1.0], np.float32), n)
+    s = TopKSparseStrategy(density=density)
+    leaf = s.encode_leaf(jnp.asarray(v))
+    k = num_kept(n, density)
+    assert leaf.k == k
+    expected = np.sort(np.argsort(mag)[-k:])
+    assert np.array_equal(np.asarray(leaf.idx, np.int64), expected)
+    decoded = np.asarray(leaf.dequantize()).ravel()
+    assert np.array_equal(decoded[expected], v[expected])  # values exact
+    dropped = np.setdiff1d(np.arange(n), expected)
+    assert np.all(decoded[dropped] == 0.0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(257, 600))
+def test_ternary_decodes_to_three_levels(seed, n):
+    from repro.compress.ternary import TernaryTNTStrategy
+
+    v = jnp.asarray(np.random.default_rng(seed).normal(size=n), jnp.float32)
+    s = TernaryTNTStrategy()
+    leaf = s.encode_leaf(v)
+    assert set(np.unique(np.asarray(leaf.codes))) <= {0, 1, 2}
+    scale = float(np.asarray(leaf.scale))
+    levels = {-scale, 0.0, scale}
+    assert set(np.unique(np.asarray(leaf.dequantize()))) <= levels
+    assert np.array_equal(np.asarray(s.qdq_leaf(v)),
+                          np.asarray(leaf.dequantize()))
+
+
+# ---------------------------------------------------------------------------
+# cross-strategy equivalence gate (the refactor cannot drift OMC numbers)
+# ---------------------------------------------------------------------------
+
+CFG = cf.ConformerConfig(
+    n_layers=1, d_model=32, n_heads=4, d_ff=64, n_classes=16, d_in=8
+)
+
+
+def test_omc_strategy_reproduces_loop_path():
+    task = make_frame_task(d_in=CFG.d_in, n_classes=CFG.n_classes,
+                           seq_len=16, num_clients=4)
+    plan = CohortPlan(num_clients=4, cohort_size=2)
+    sim = simulate.SimConfig(local_steps=1, client_lr=0.1)
+    storage, hist = simulate.run_training(
+        cf, CFG, OMC, sim, plan, lambda c, r, s: task.batch(c, r, s, 2),
+        jax.random.PRNGKey(0), num_rounds=2, eval_every=100, wire=True,
+    )
+
+    f32 = decompress_tree(storage)
+    specs = cf.param_specs(CFG)
+    strategy = OMC.strategy()
+
+    # storage bit-equality: the adapter IS compress_params
+    via_state = compress_params(f32, specs, OMC)
+    via_zoo = compress.encode_tree(strategy, f32, OMC, specs)
+    sl = jax.tree_util.tree_leaves(via_state, is_leaf=is_compressed)
+    zl = jax.tree_util.tree_leaves(via_zoo, is_leaf=is_compressed)
+    assert len(sl) == len(zl)
+    n_comp = 0
+    for a, b in zip(sl, zl):
+        assert is_compressed(a) == is_compressed(b)
+        if is_compressed(a):
+            n_comp += 1
+            assert np.array_equal(np.asarray(a.codes), np.asarray(b.codes))
+            assert np.array_equal(np.asarray(a.s), np.asarray(b.s))
+            assert np.array_equal(np.asarray(a.b), np.asarray(b.b))
+        else:
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert n_comp > 0
+
+    # wire-byte equality: payloads, planning ledger, training history
+    assert len(codecs.encode_payload(via_zoo)) \
+        == len(codecs.encode_payload(via_state))
+    wt = accounting.build_wire_table(f32, specs, OMC)
+    assert wt.download_bytes_strategy(strategy) == wt.download_bytes(OMC)
+    mask = np.zeros(wt.num_vars, bool)
+    mask[::2] = True
+    assert wt.upload_bytes_strategy(strategy, mask) \
+        == wt.upload_bytes(mask, OMC)
+    assert hist[0]["down_bytes"] \
+        == wt.download_bytes_strategy(strategy) * plan.cohort_size
+
+    # model view equality: within one quantization step (here: bit-exact)
+    via_zoo_f32 = compress.decode_tree(via_zoo)
+    for a, b in zip(jax.tree_util.tree_leaves(decompress_tree(via_state)),
+                    jax.tree_util.tree_leaves(via_zoo_f32)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_wiretable_rejects_data_dependent_strategy():
+    pipe = next(z for z in ZOO if z.name == "pipeline")
+    params = cf.init(jax.random.PRNGKey(0), CFG)
+    wt = accounting.build_wire_table(params, cf.param_specs(CFG), OMC)
+    with pytest.raises(ValueError, match="data-dependent"):
+        wt.download_bytes_strategy(pipe)
