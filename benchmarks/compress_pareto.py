@@ -23,31 +23,45 @@ Every row's wire bytes are reconciled three ways before being reported
     PYTHONPATH=src python benchmarks/compress_pareto.py            # full
     PYTHONPATH=src python benchmarks/compress_pareto.py --smoke    # CI-sized
 
-Emits ``experiments/bench/compress_strategies.json``.
+A second section (``--trained``) moves the frontier from *transport of
+frozen weights* to *training to convergence*: each zoo strategy drives the
+vectorized engine (DESIGN.md §12) for N rounds and the recorded point is
+(final eval loss, cumulative wire MB).  This is where error feedback earns
+its keep — EF top-k must reach a strictly lower eval loss than plain top-k
+at byte-identical wire cost — and where the strategy seam is re-gated:
+``strategy="omc"`` must land on exactly the hardcoded path's loss and bytes.
+
+Emits ``experiments/bench/compress_strategies.json`` (sections merge, so
+``--static`` and ``--trained`` runs update one artifact).
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 
 try:
-    from .common import conformer_setup, eval_loss, print_table, save_result
+    from .common import (BENCH_CLIENTS, BENCH_COHORT, OUT_DIR,
+                         conformer_setup, eval_loss, print_table, save_result)
 except ImportError:  # run as a script: python benchmarks/compress_pareto.py
-    import os
     import sys
 
     sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
-    from common import conformer_setup, eval_loss, print_table, save_result
+    from common import (BENCH_CLIENTS, BENCH_COHORT, OUT_DIR,
+                        conformer_setup, eval_loss, print_table, save_result)
 
 from repro import compress
 from repro.api import codecs
 from repro.core.omc import OMCConfig
+from repro.core.store import decompress_tree
 from repro.data.synthetic import make_lm_task
-from repro.federated import accounting
+from repro.federated import accounting, engine, simulate
+from repro.federated.cohort import CohortPlan
 from repro.models import transformer as tr
 from repro.models.common import IDENTITY_MAT
 
@@ -147,7 +161,107 @@ def _pareto_flags(rows):
     return rows
 
 
-def run(smoke: bool = False, seed: int = 0):
+def _train_point(label, strategy, family, cfg, data_fn, eval_batches, omc,
+                 sim, spec, rounds, seed):
+    """Train to convergence under one strategy; return the frontier point."""
+    t0 = time.time()
+    storage, hist = engine.run_training_vectorized(
+        family, cfg, omc, sim, spec, data_fn, jax.random.PRNGKey(seed),
+        num_rounds=rounds, eval_every=10_000, strategy=strategy,
+    )
+    dt = time.time() - t0
+    up = sum(h["up_bytes"] for h in hist)
+    down = sum(h["down_bytes"] for h in hist)
+    final = eval_loss(family, cfg, decompress_tree(storage), eval_batches)
+    return dict(
+        label=label,
+        strategy=strategy.name if strategy is not None else "omc",
+        error_feedback=bool(getattr(strategy, "error_feedback", False)),
+        rounds=rounds,
+        final_eval=round(final, 6),
+        up_mb=round(up / 2**20, 4),
+        down_mb=round(down / 2**20, 4),
+        wire_mb=round((up + down) / 2**20, 4),
+        up_bytes=up,
+        down_bytes=down,
+        train_curve=[round(h["loss"], 5) for h in hist],
+        wall_s=round(dt, 1),
+    )
+
+
+def run_trained(smoke: bool = False, seed: int = 0):
+    """Trained-to-convergence frontier: eval loss vs cumulative wire MB."""
+    family, cfg, task, data_fn, eval_batches = conformer_setup(seed=seed)
+    eval_batches = eval_batches[:2] if smoke else eval_batches
+    rounds = 4 if smoke else 30
+    omc = OMCConfig.parse("S1E3M7")
+    sim = simulate.SimConfig(local_steps=2, client_lr=0.1)
+    spec = engine.CohortSpec(CohortPlan(num_clients=BENCH_CLIENTS,
+                                        cohort_size=BENCH_COHORT))
+    density = 0.1
+    points = [
+        ("omc-hardcoded", None),
+        ("omc-strategy", compress.get_strategy("omc")),
+        ("topk-ef", compress.get_strategy("topk", density=density)),
+        ("topk-plain", compress.get_strategy("topk", density=density,
+                                             error_feedback=False)),
+        ("ternary-ef", compress.get_strategy("ternary")),
+    ]
+    rows = [_train_point(lbl, s, family, cfg, data_fn, eval_batches, omc,
+                         sim, spec, rounds, seed) for lbl, s in points]
+    by = {r["label"]: r for r in rows}
+
+    # the strategy seam costs nothing: strategy="omc" is the hardcoded path
+    assert by["omc-strategy"]["final_eval"] == by["omc-hardcoded"]["final_eval"]
+    assert by["omc-strategy"]["up_bytes"] == by["omc-hardcoded"]["up_bytes"]
+    assert by["omc-strategy"]["down_bytes"] == by["omc-hardcoded"]["down_bytes"]
+    # matched wire cost: EF and plain top-k ship byte-identical payloads
+    assert by["topk-ef"]["up_bytes"] == by["topk-plain"]["up_bytes"]
+    ef_wins = by["topk-ef"]["final_eval"] < by["topk-plain"]["final_eval"]
+    if not smoke:
+        # the acceptance gate: the residual memory must pay off at this budget
+        assert ef_wins, (by["topk-ef"]["final_eval"],
+                         by["topk-plain"]["final_eval"])
+
+    # Pareto flags on (cumulative wire, final eval)
+    for r in rows:
+        r["wire_bytes"], r["loss"] = r["up_bytes"] + r["down_bytes"], r["final_eval"]
+    _pareto_flags(rows)
+    for r in rows:
+        del r["wire_bytes"], r["loss"]
+
+    print_table("Trained-to-convergence frontier (eval loss vs wire MB)",
+                rows, ["label", "rounds", "final_eval", "up_mb", "down_mb",
+                       "wire_mb", "error_feedback", "pareto", "wall_s"])
+    return dict(smoke=smoke, seed=seed, rounds=rounds, density=density,
+                cohort=spec.plan.cohort_size, num_clients=spec.plan.num_clients,
+                local_steps=sim.local_steps, client_lr=sim.client_lr,
+                ef_wins=bool(ef_wins), points=rows)
+
+
+def _merge_save(section_updates):
+    """Update sections of compress_strategies.json, preserving the others."""
+    path = os.path.join(OUT_DIR, "compress_strategies.json")
+    payload = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            payload = json.load(f)
+    payload.update(section_updates)
+    save_result("compress_strategies", payload)
+    return payload
+
+
+def run(smoke: bool = False, seed: int = 0, static: bool = True,
+        trained: bool = True):
+    sections = {}
+    if static:
+        sections.update(run_static(smoke=smoke, seed=seed))
+    if trained:
+        sections["trained"] = run_trained(smoke=smoke, seed=seed)
+    return _merge_save(sections)
+
+
+def run_static(smoke: bool = False, seed: int = 0):
     zoo = compress.default_zoo()
     omc = OMCConfig.parse("S1E3M7")  # selection policy shared by every point
     models = {}
@@ -185,23 +299,27 @@ def run(smoke: bool = False, seed: int = 0):
     print_table("Quality vs wire bytes (Pareto frontier)", all_rows,
                 ["model", "label", "wire_mb", "wire_ratio", "loss",
                  "delta_loss", "pareto", "planned", "encode_ms"])
-    payload = dict(
+    return dict(
         smoke=smoke, seed=seed,
         strategies=[s.describe() for s in zoo],
         selection_fmt=omc.fmt.name,
         models=models,
     )
-    save_result("compress_strategies", payload)
-    return payload
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--smoke", action="store_true",
-                    help="CI-sized: fewer pretrain steps and eval batches")
+                    help="CI-sized: fewer pretrain steps, eval batches, rounds")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--static", action="store_true",
+                    help="only the frozen-weights transport frontier")
+    ap.add_argument("--trained", action="store_true",
+                    help="only the trained-to-convergence frontier")
     args = ap.parse_args(argv)
-    run(smoke=args.smoke, seed=args.seed)
+    both = args.static == args.trained  # neither flag (or both) = everything
+    run(smoke=args.smoke, seed=args.seed,
+        static=both or args.static, trained=both or args.trained)
     return 0
 
 

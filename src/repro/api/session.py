@@ -34,6 +34,33 @@ from repro.federated.state import compress_params, state_bytes_report
 from . import codecs
 
 
+def _resolve_strategy(strategy):
+    """Accept a CompressionStrategy, a registry name, or None."""
+    if strategy is None or not isinstance(strategy, str):
+        return strategy
+    from repro.compress import get_strategy
+
+    return get_strategy(strategy)
+
+
+def _reported_model(tree, base_storage, strategy):
+    """Server-side view of one decoded upload (DESIGN.md §12).
+
+    ``strategy=None``: the classic OMC path — dequantize the report.
+    Upload-only strategies ship the client's *update*; reconstruct
+    ``base + update`` so sparse frames (zeros off-support) never shrink
+    the aggregated model.  Dense strategies ship the full model."""
+    from repro.compress import decode_tree
+
+    if strategy is None:
+        return decompress_tree(tree)
+    decoded = decode_tree(tree)
+    if not strategy.upload_only:
+        return decoded
+    base_f32 = decompress_tree(base_storage)
+    return jax.tree_util.tree_map(jnp.add, base_f32, decoded)
+
+
 @dataclasses.dataclass
 class RoundTicket:
     """What the server hands a transport for one round of downloads.
@@ -114,6 +141,13 @@ class FLSession:
     (the normal case) or full payloads; ``close_round`` FedAvg-aggregates
     whatever reports arrived (report-goal semantics: a partial cohort is
     fine) and applies the server update with learning rate ``server_lr``.
+
+    ``strategy`` (a :class:`repro.compress.CompressionStrategy` or registry
+    name) switches the *upload* direction to a zoo compressor (DESIGN.md
+    §12): clients send strategy-encoded payloads — for upload-only
+    strategies the payload carries the client's *update* and ``ingest``
+    reconstructs ``download + update`` — while downloads stay the
+    compressed-at-rest OMC state either way.
     """
 
     def __init__(
@@ -127,11 +161,13 @@ class FLSession:
         seed: int = 0,
         init_params=None,
         profile_fn: Optional[Callable[[int], str]] = None,
+        strategy=None,
     ):
         self.family = family
         self.cfg = cfg
         self.omc = omc
         self.plan = plan
+        self.strategy = _resolve_strategy(strategy)
         # client id -> device-profile name (engine.PROFILES keys); stamped
         # onto every RoundTicket so transports know each client's tier
         self.profile_fn = profile_fn
@@ -199,7 +235,9 @@ class FLSession:
         if client_id not in self._ticket.client_ids:
             raise KeyError(f"client {client_id} is not in this round's cohort")
         tree, info = codecs.decode_payload(blob, base=self.storage)
-        self._reports[client_id] = decompress_tree(tree)
+        self._reports[client_id] = _reported_model(
+            tree, self.storage, self.strategy
+        )
         self.traffic["up_bytes"] += info.total_bytes
         self.traffic["up_fp32_bytes"] += self._fp32_bytes
         return info
@@ -321,7 +359,8 @@ class FLSession:
         base = self._version_storages[ticket.server_version]
         tree, info = codecs.decode_payload(blob, base=base)
         self._async_buffer.append(
-            (client_id, ticket.server_version, decompress_tree(tree))
+            (client_id, ticket.server_version,
+             _reported_model(tree, base, self.strategy))
         )
         self.traffic["up_bytes"] += info.total_bytes
         self.traffic["up_fp32_bytes"] += self._fp32_bytes
@@ -384,16 +423,26 @@ class FLClient:
     re-compressed under the session policy (transport compression, paper §2)
     and delta-encoded against the *received* model, so unchanged codes cost
     ~0 wire bytes.
+
+    With a ``strategy`` (matching the session's — DESIGN.md §12) the upload
+    is strategy-encoded instead: dense strategies send the full trained
+    model, upload-only strategies send the *update* ``trained - received``
+    — with a host-side error-feedback residual carried across this
+    client's rounds when the strategy opts in (the residual is exactly
+    ``compensated - decode(encode(compensated))``, so the client and the
+    server can never disagree about what was dropped).
     """
 
     def __init__(self, client_id: int, family, cfg, omc: OMCConfig,
-                 train_fn: Callable[[Any, int, int], Any]):
+                 train_fn: Callable[[Any, int, int], Any], strategy=None):
         self.client_id = client_id
         self.specs = family.param_specs(cfg)
         self.omc = omc
         self.train_fn = train_fn
+        self.strategy = _resolve_strategy(strategy)
         self._cache = None  # last decoded download tree (this client's model)
         self._cache_digest = 0
+        self._residual = None  # error-feedback accumulator (EF strategies)
 
     def run_round(self, ticket: RoundTicket) -> bytes:
         use_delta = (
@@ -409,6 +458,8 @@ class FLClient:
         self._cache_digest = codecs.tree_digest(tree)
         params = decompress_tree(tree)
         trained = self.train_fn(params, self.client_id, ticket.round_index)
+        if self.strategy is not None:
+            return self._strategy_upload(params, trained, ticket.round_index)
         upload_tree = (
             compress_params(trained, self.specs, self.omc)
             if self.omc.enabled
@@ -417,6 +468,26 @@ class FLClient:
         return codecs.encode_payload(
             upload_tree, base=tree, round_index=ticket.round_index
         )
+
+    def _strategy_upload(self, received, trained, round_index: int) -> bytes:
+        from repro.compress import decode_tree, encode_tree
+
+        tmap = jax.tree_util.tree_map
+        if not self.strategy.upload_only:
+            upload_tree = encode_tree(self.strategy, trained, self.omc,
+                                      self.specs)
+            return codecs.encode_payload(upload_tree,
+                                         round_index=round_index)
+        comp = tmap(jnp.subtract, trained, received)
+        if self.strategy.error_feedback:
+            if self._residual is None:
+                self._residual = tmap(jnp.zeros_like, comp)
+            comp = tmap(jnp.add, comp, self._residual)
+        upload_tree = encode_tree(self.strategy, comp, self.omc, self.specs)
+        if self.strategy.error_feedback:
+            self._residual = tmap(jnp.subtract, comp,
+                                  decode_tree(upload_tree))
+        return codecs.encode_payload(upload_tree, round_index=round_index)
 
 
 class ServeSession:

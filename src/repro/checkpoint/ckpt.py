@@ -125,15 +125,22 @@ def _async_state_tree(runner) -> Any:
     Buffer models, the per-version download storages pending tickets still
     reference, and the lazily-trained-but-not-yet-uploaded cache all ride
     along with the server storage, so a killed async run resumes *mid
-    buffer* with nothing retrained and nothing re-downloaded.
+    buffer* with nothing retrained and nothing re-downloaded.  Training
+    under an error-feedback strategy (DESIGN.md §12) adds the per-client
+    residual state ``runner.ef`` — a resume must carry the residuals of
+    already-trained-but-unflushed updates or EF's no-coordinate-ever-lost
+    invariant breaks.
     """
-    return dict(
+    tree = dict(
         storage=runner.storage,
         buffer=[e.model for e in runner.buffer],
         versions={str(v): s for v, s in sorted(runner.version_storages.items())},
         trained={f"{v}|{c}": m
                  for (v, c), (m, _) in sorted(runner.trained.items())},
     )
+    if getattr(runner, "ef", None) is not None:
+        tree["ef"] = dict(runner.ef)
+    return tree
 
 
 def save_async_state(ckpt_dir: str, runner, keep: int = 3) -> str:
@@ -166,6 +173,7 @@ def save_async_state(ckpt_dir: str, runner, keep: int = 3) -> str:
                         for c, k in runner.round_counters.items()},
         trained_losses={f"{v}|{c}": float(l)
                         for (v, c), (_, l) in runner.trained.items()},
+        has_ef=getattr(runner, "ef", None) is not None,
         history=runner.history,
         stats=(
             dict(snapshot=runner.stats.snapshot(),
@@ -197,6 +205,16 @@ def restore_async_state(path: str, runner) -> Dict[str, Any]:
         versions={str(v): runner.storage for v in extra["version_keys"]},
         trained={k: f32_t for k in sorted(extra["trained_losses"])},
     )
+    has_ef = bool(extra.get("has_ef"))
+    if has_ef != (runner.ef is not None):
+        raise ValueError(
+            "error-feedback state mismatch: checkpoint "
+            f"{'has' if has_ef else 'lacks'} residuals but the runner "
+            f"{'lacks' if has_ef else 'has'} them — construct the runner "
+            "with the same strategy= the checkpointed run used"
+        )
+    if has_ef:
+        template["ef"] = dict(runner.ef)
     state, _ = restore_state(path, template)
 
     from repro.federated.async_engine import _BufferEntry, _Pending
@@ -230,6 +248,8 @@ def restore_async_state(path: str, runner) -> Dict[str, Any]:
             (state["trained"][k], float(l))
         for k, l in extra["trained_losses"].items()
     }
+    if has_ef:
+        runner.ef = dict(state["ef"])
     runner.history = list(extra["history"])
     if extra["stats"] is not None and runner.stats is not None:
         snap = extra["stats"]["snapshot"]

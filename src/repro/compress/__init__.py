@@ -34,6 +34,7 @@ from .base import (  # noqa: F401
     strategy_class,
     tree_wire_bytes,
 )
+from . import feedback  # noqa: F401  (error-feedback residuals, DESIGN.md §12)
 from .omc_quant import OMCQuantStrategy  # noqa: F401
 from .pipeline import PipelineStrategy, PipelineVariable  # noqa: F401
 from .ternary import TernaryTNTStrategy, TernaryVariable, ternarize  # noqa: F401
@@ -55,6 +56,7 @@ __all__ = [
     "decode_tree",
     "default_zoo",
     "encode_tree",
+    "feedback",
     "get_strategy",
     "is_encoded_leaf",
     "is_strategy_leaf",

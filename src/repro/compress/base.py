@@ -94,6 +94,19 @@ class CompressionStrategy(abc.ABC):
     #: delta rule on repeat sends: "xor-sparse" (the §7 sparse XOR-delta,
     #: OMC's rule) or None (full-only)
     delta_rule: Optional[str] = None
+    #: training-direction contract (DESIGN.md §12).  ``upload_only=True``
+    #: marks strategies that compress only the client->server direction
+    #: (sparse codes destroy a downloaded model, so the client trains on
+    #: the dense server state and the qdq applies to its *update*);
+    #: ``False`` means the qdq is also the client's in-memory view of the
+    #: download, as in the paper's OMC simulation mode.
+    upload_only: bool = False
+    #: whether the training paths carry a per-client error-feedback
+    #: residual for this strategy (DESIGN.md §12; Konečný et al., arxiv
+    #: 1610.05492).  Always False for dense strategies — EF compensates
+    #: what the sparsifier dropped, and a dense qdq drops nothing worth
+    #: accumulating.  Sparse strategies expose it as a constructor field.
+    error_feedback: bool = False
 
     # -- per-variable codec -------------------------------------------------
     @abc.abstractmethod
@@ -115,6 +128,25 @@ class CompressionStrategy(abc.ABC):
         """qdq with a straight-through gradient (QAT-style training)."""
         return v + jax.lax.stop_gradient(
             self.qdq_leaf(v, batch_axes=batch_axes) - v
+        )
+
+    def train_qdq_leaf(self, v: jax.Array, *, batch_axes: int = 0) -> jax.Array:
+        """The qdq the *training* client view applies (DESIGN.md §12).
+
+        Defaults to the wire qdq.  Strategies whose historical simulation
+        numerics differ from the wire encode override this — notably OMC,
+        whose in-training view uses the exact per-variable PVT solve
+        (``core.omc.qdq_pvt_leaf``) while the wire path uses the fast
+        distributed solver; the override keeps ``strategy="omc"`` training
+        bit-identical to the pre-strategy hardcoded path.
+        """
+        return self.qdq_leaf(v, batch_axes=batch_axes)
+
+    def train_qdq_ste_leaf(self, v: jax.Array, *,
+                           batch_axes: int = 0) -> jax.Array:
+        """:meth:`train_qdq_leaf` with a straight-through gradient."""
+        return v + jax.lax.stop_gradient(
+            self.train_qdq_leaf(v, batch_axes=batch_axes) - v
         )
 
     # -- byte accounting ----------------------------------------------------

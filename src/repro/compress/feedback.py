@@ -1,0 +1,112 @@
+"""Per-client error-feedback residual accumulators (DESIGN.md §12).
+
+Sparse upload strategies (top-k, ternary, the top-k pipeline) drop most of
+a client's update on every send.  Error feedback (Konečný et al., arxiv
+1610.05492; convergence under compression pipelines: arxiv 2310.14693)
+keeps training unbiased in the long run: the client accumulates what the
+compressor dropped in a local residual ``e`` and adds it back before the
+next send::
+
+    comp  = delta + e          # compensated update
+    sent  = qdq(comp)          # what actually travels
+    e'    = comp - sent        # carried to the client's next round
+
+The invariant ``sent + e' == comp`` (exact for value-preserving sparsifiers
+like f32 top-k, one rounding step otherwise) means no coordinate is ever
+lost — only delayed.  Dense strategies drop nothing worth accumulating, so
+EF is a structural no-op for them (``CompressionStrategy.error_feedback``
+is ``False`` and the training paths never allocate a residual).
+
+The residual state is one pytree per *population*: a dict keyed by the
+selected-variable paths (the same canonical
+:func:`repro.federated.accounting.walk_selected` order every PPQ mask
+uses), each leaf shaped ``[num_clients, *var_shape]``.  All three training
+paths (loop / engine / async) share this layout, so a residual state is
+checkpointable with the ordinary :mod:`repro.checkpoint` pytree machinery
+and transfers between paths.  Property tests: ``tests/test_feedback.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.omc import OMCConfig
+
+from .base import CompressionStrategy
+
+
+def takes_residual(omc: OMCConfig, strategy: Optional[CompressionStrategy]
+                   ) -> bool:
+    """True when training under ``strategy`` threads an EF residual.
+
+    Requires all three: a strategy is actually plugged in, the OMC config
+    selects variables at all (``omc.enabled`` — the selection policy is
+    OMC's even under zoo strategies), and the strategy is a sparse
+    upload-direction compressor that opted into error feedback.
+    """
+    return (strategy is not None and omc.enabled
+            and strategy.upload_only and bool(strategy.error_feedback))
+
+
+def init_ef_state(params_f32, specs, omc: OMCConfig,
+                  num_clients: int) -> Dict[str, jax.Array]:
+    """Zeroed residuals: ``{selected-var path: f32[num_clients, *shape]}``."""
+    from repro.federated import accounting
+
+    sel, _ = accounting.walk_selected(params_f32, specs, omc)
+    return {
+        name: jnp.zeros((int(num_clients),) + tuple(leaf.shape), jnp.float32)
+        for name, _, leaf in sel
+    }
+
+
+def gather_rows(ef: Dict[str, jax.Array], client_ids) -> Dict[str, jax.Array]:
+    """Per-cohort residual rows (traceable gather; ids may be a traced
+    int array — the engine gathers inside its compiled round program)."""
+    return {k: v[client_ids] for k, v in ef.items()}
+
+
+def scatter_rows(ef: Dict[str, jax.Array], client_ids,
+                 rows: Dict[str, jax.Array]) -> Dict[str, jax.Array]:
+    """New population state with ``rows`` written at ``client_ids``.
+
+    ``client_ids`` must be unique (cohorts are sampled without
+    replacement; duplicate indices would make the scatter order-dependent).
+    """
+    return {k: ef[k].at[client_ids].set(rows[k]) for k in ef}
+
+
+def ef_bytes(ef: Optional[Dict[str, jax.Array]]) -> int:
+    """Client-state memory the residuals cost (f32), for byte reports."""
+    if not ef:
+        return 0
+    return sum(4 * int(v.size) for v in ef.values())
+
+
+def ef_norms(ef: Dict[str, jax.Array]) -> Dict[str, float]:
+    """Per-variable L2 norm over the whole population (diagnostics; the
+    boundedness property tests assert these don't grow without bound)."""
+    return {k: float(jnp.sqrt(jnp.sum(jnp.square(v)))) for k, v in ef.items()}
+
+
+def total_norm(ef: Optional[Dict[str, jax.Array]]) -> float:
+    if not ef:
+        return 0.0
+    return float(jnp.sqrt(sum(jnp.sum(jnp.square(v)) for v in ef.values())))
+
+
+def compensate_leaf(strategy: CompressionStrategy, delta, residual, mask_bit,
+                    *, batch_axes: int = 0, ste: bool = False):
+    """One variable's EF send rule: ``(sent, new_residual)``.
+
+    ``mask_bit`` is the client's PPQ bit for this variable: when unset the
+    variable travels f32 (OMC transport semantics generalized to the zoo),
+    the compensated update arrives exactly, and the residual drains to 0.
+    """
+    comp = delta + residual
+    qdq = strategy.train_qdq_ste_leaf if ste else strategy.train_qdq_leaf
+    sent = jnp.where(mask_bit, qdq(comp, batch_axes=batch_axes), comp)
+    return sent, comp - sent

@@ -72,6 +72,18 @@ class OMCQuantStrategy(CompressionStrategy):
             s, b = pvt_solve(v, vq)
         return pvt_apply(vq, s, b)
 
+    def train_qdq_leaf(self, v, *, batch_axes: int = 0) -> jax.Array:
+        """Exactly ``core.omc.qdq_pvt_leaf``: the paper's simulation-mode
+        view (exact per-variable PVT solve, no stacked-axis split) — what
+        ``simulate.client_view`` has always applied, so training with
+        ``strategy=OMCQuantStrategy(...)`` is bit-identical to the
+        hardcoded-qdq path (gated in ``tests/test_train_strategy.py``)."""
+        vq = value_quantize(v, self.fmt)
+        if not self.pvt:
+            return vq
+        s, b = pvt_solve(v, vq)
+        return pvt_apply(vq, s, b)
+
     def leaf_wire_bytes(self, leaf: CompressedVariable) -> int:
         if not is_compressed(leaf):
             raise TypeError(f"expected CompressedVariable, got {type(leaf)}")

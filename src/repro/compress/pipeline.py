@@ -70,10 +70,14 @@ class PipelineStrategy(CompressionStrategy):
     fmt: FloatFormat = FloatFormat(3, 7)  # stage 1: the paper's minifloat
     density: float = 0.1  # stage 2: magnitude top-k
     level: int = 6  # stage 3: DEFLATE effort
+    #: the lossy stages are top-k + quantize, so error feedback applies
+    #: exactly as for ``topk`` (DESIGN.md §12)
+    error_feedback: bool = True
 
     name = "pipeline"
     wire_version = 1
     delta_rule = None
+    upload_only = True  # sparse: compresses the client->server direction
 
     def __post_init__(self):
         if not (0.0 < self.density <= 1.0):

@@ -76,10 +76,14 @@ class TernaryTNTStrategy(CompressionStrategy):
     """TNT/TWN ternary weights: 2-bit codes + one scale per stacked entry."""
 
     threshold_factor: float = 0.7  # the TWN Δ = 0.7·E|v| heuristic
+    #: accumulate the ternarization error in a per-client residual
+    #: (training paths only — see DESIGN.md §12)
+    error_feedback: bool = True
 
     name = "ternary"
     wire_version = 1
     delta_rule = None
+    upload_only = True  # a ternarized download would destroy the model
 
     @property
     def label(self) -> str:

@@ -80,10 +80,15 @@ class TopKSparseStrategy(CompressionStrategy):
 
     density: float = 0.1
     value_fmt: FloatFormat = FP32  # identity: raw f32 values on the wire
+    #: carry the dropped coordinates in a per-client residual and add them
+    #: back before the next send (error feedback, arxiv 1610.05492) —
+    #: training paths only; the wire format is unaffected
+    error_feedback: bool = True
 
     name = "topk"
     wire_version = 1
     delta_rule = None  # full-only: the support set changes every send
+    upload_only = True  # sparse codes compress the client->server direction
 
     def __post_init__(self):
         if not (0.0 < self.density <= 1.0):

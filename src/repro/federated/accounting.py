@@ -198,6 +198,58 @@ def client_upload_bytes(
     return table.upload_bytes(mask, omc)
 
 
+# -- training-under-strategy accounting (DESIGN.md §12) ----------------------
+
+
+def client_upload_bytes_strategy(
+    table: WireTable, omc: OMCConfig, strategy, round_index, client_id
+) -> int:
+    """One client's upload bytes when *training* under a zoo strategy.
+
+    Same PPQ transport semantics as :func:`client_upload_bytes` — variables
+    whose mask bit is set travel strategy-encoded, the rest f32 — with the
+    per-variable sizes drawn from ``strategy.plan_wire_bytes``.  For
+    ``strategy=get_strategy("omc")`` matching ``omc`` this is byte-exact to
+    the classic path (gated in ``tests/test_train_strategy.py``).  Raises
+    for data-dependent strategies (pipeline): train those with wire
+    accounting off and measure encoded payloads instead."""
+    if not omc.enabled or table.num_vars == 0:
+        return table.fp32_total
+    mask = _ppq_mask(omc.ppq_key(), round_index, client_id, table.num_vars,
+                     omc.quantize_fraction)
+    return table.upload_bytes_strategy(strategy, mask)
+
+
+def cohort_upload_bytes_strategy(
+    table: WireTable, omc: OMCConfig, strategy, round_index, client_ids
+) -> np.ndarray:
+    """Batched (engine) counterpart of :func:`client_upload_bytes_strategy`."""
+    c = int(np.asarray(client_ids).shape[0])
+    if not omc.enabled or table.num_vars == 0:
+        return np.full((c,), table.fp32_total, np.int64)
+    masks = np.asarray(
+        _ppq_masks_batch(omc.ppq_key(), round_index, client_ids,
+                         table.num_vars, omc.quantize_fraction),
+        bool,
+    )
+    sizes = table.strategy_var_bytes(strategy)
+    fp32v = table._fp32_vars()
+    per_var = np.where(masks, sizes[None, :], fp32v[None, :])
+    return per_var.sum(axis=1) + table.raw_bytes
+
+
+def download_bytes_train(table: WireTable, omc: OMCConfig, strategy) -> int:
+    """Per-client download bytes when training under ``strategy`` (§12).
+
+    Upload-only strategies (top-k / ternary / pipeline) never compress the
+    download direction — the client trains on the dense at-rest state, so
+    the download costs the ordinary ``download_bytes(omc)``.  Dense
+    strategies re-encode the download under their own format."""
+    if strategy is None or strategy.upload_only:
+        return table.download_bytes(omc)
+    return table.download_bytes_strategy(strategy)
+
+
 @dataclasses.dataclass
 class AsyncWireStats:
     """Wire-byte ledger for the non-barrier runtime (DESIGN.md §10).
@@ -218,11 +270,13 @@ class AsyncWireStats:
     :func:`repro.api.codecs.payload_bytes_report` (tested in
     ``tests/test_async_engine.py``).
 
-    ``strategy`` switches the ledger to a zoo strategy's wire sizes
-    (DESIGN.md §11): downloads and uploads are then budgeted through the
-    table's ``*_bytes_strategy`` rows (PPQ masks don't apply — the mask
-    machinery is the OMC strategy's transport rule) and stay byte-exact
-    against that strategy's serialized payloads.
+    ``strategy`` switches the ledger to training-under-strategy wire sizes
+    (DESIGN.md §12): uploads are budgeted per ``(round_index, client_id)``
+    PPQ mask through :func:`client_upload_bytes_strategy` — exactly what
+    the async runtime's client bodies send — and downloads through
+    :func:`download_bytes_train` (upload-only strategies download the
+    dense at-rest state; dense strategies re-encode it).  For the OMC
+    strategy this reproduces the classic ledger byte-exactly.
     """
 
     table: WireTable
@@ -240,13 +294,13 @@ class AsyncWireStats:
     _pending: dict = dataclasses.field(default_factory=dict, repr=False)
 
     def _down(self, omc: OMCConfig) -> int:
-        if self.strategy is not None:
-            return self.table.download_bytes_strategy(self.strategy)
-        return self.table.download_bytes(omc)
+        return download_bytes_train(self.table, omc, self.strategy)
 
     def _up(self, omc: OMCConfig, round_index: int, client_id: int) -> int:
         if self.strategy is not None:
-            return self.table.upload_bytes_strategy(self.strategy)
+            return client_upload_bytes_strategy(
+                self.table, omc, self.strategy, round_index, client_id
+            )
         return client_upload_bytes(self.table, omc, round_index, client_id)
 
     def start_round(self, omc: OMCConfig, round_index: int,

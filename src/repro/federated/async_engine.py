@@ -162,7 +162,8 @@ class AsyncConfig:
 
 
 def make_batch_train_fn(family, cfg, specs, omc: OMCConfig, sim: SimConfig,
-                        data_fn, capacity: int):
+                        data_fn, capacity: int, strategy=None,
+                        ste: bool = False, takes_residual: bool = False):
     """Jitted ``(storage, cids[cap], rounds[cap]) -> (models, losses)``.
 
     The same single-client body the sync engine vmaps, over a *padded*
@@ -175,9 +176,30 @@ def make_batch_train_fn(family, cfg, specs, omc: OMCConfig, sim: SimConfig,
     coincide).  ``data_fn`` is traced inside (synthetic tasks and
     partitioned batch fns are traceable pure functions of
     ``(client_id, round_index, step)``).
+
+    ``strategy``/``ste`` train under a zoo compression strategy
+    (DESIGN.md §12); with ``takes_residual`` the program takes the cohort's
+    error-feedback residual rows as a fourth argument and returns the
+    updated rows as a third output (pad lanes recompute a real client's
+    rows — the caller scatters only the real lanes back).
     """
-    one = simulate.make_client_fn(family, cfg, specs, omc, sim)
+    one = simulate.make_client_fn(family, cfg, specs, omc, sim,
+                                  strategy, ste, takes_residual)
     steps = jnp.arange(sim.local_steps)
+
+    if takes_residual:
+
+        @jax.jit
+        def batch_fn_ef(storage, cids, rounds, ef_rows):
+            server_f32 = decompress_tree(storage)
+            batches = jax.vmap(
+                lambda c, r: jax.vmap(lambda s: data_fn(c, r, s))(steps)
+            )(cids, rounds)
+            return jax.vmap(
+                lambda b, r, c, e: one(server_f32, b, r, c, e)
+            )(batches, rounds, cids, ef_rows)
+
+        return batch_fn_ef
 
     @jax.jit
     def batch_fn(storage, cids, rounds):
@@ -269,6 +291,8 @@ class AsyncRunner:
         init_key=None,
         init_params=None,
         wire: bool = True,
+        strategy=None,
+        ste: bool = False,
     ):
         if init_key is None and init_params is None:
             raise ValueError("need init_key or init_params")
@@ -284,13 +308,25 @@ class AsyncRunner:
         self.storage = (
             compress_params(params, self.specs, omc) if omc.enabled else params
         )
+        # training-under-strategy (DESIGN.md §12): the batched client body
+        # applies the strategy's qdq; EF residuals live per client here and
+        # are checkpointed with the rest of the runtime state
+        self.strategy, self.ste = strategy, ste
+        takes_ef = simulate.ef_lib.takes_residual(omc, strategy)
+        self.ef = (
+            simulate.ef_lib.init_ef_state(params, self.specs, omc,
+                                          self.num_clients)
+            if takes_ef else None
+        )
         self._batch_fn = make_batch_train_fn(
-            family, cfg, self.specs, omc, sim, data_fn, acfg.capacity
+            family, cfg, self.specs, omc, sim, data_fn, acfg.capacity,
+            strategy=strategy, ste=ste, takes_residual=takes_ef,
         )
         self._flush_fn = make_flush_fn(self.specs, omc, sim, acfg.buffer_goal)
         self.stats = (
             accounting.AsyncWireStats(
-                accounting.build_wire_table(params, self.specs, omc)
+                accounting.build_wire_table(params, self.specs, omc),
+                strategy=strategy,
             ) if wire else None
         )
 
@@ -425,11 +461,22 @@ class AsyncRunner:
             for i in range(0, len(group), cap):
                 chunk = group[i:i + cap]
                 padded = chunk + [chunk[-1]] * (cap - len(chunk))
-                models, losses = self._batch_fn(
-                    storage,
-                    jnp.asarray([c for c, _ in padded], jnp.int32),
-                    jnp.asarray([r for _, r in padded], jnp.int32),
-                )
+                cids = jnp.asarray([c for c, _ in padded], jnp.int32)
+                rnds = jnp.asarray([r for _, r in padded], jnp.int32)
+                if self.ef is not None:
+                    rows = {k: v[cids] for k, v in self.ef.items()}
+                    models, losses, new_rows = self._batch_fn(
+                        storage, cids, rnds, rows
+                    )
+                    # scatter only the real lanes back — pad lanes duplicate
+                    # chunk[-1] and must not double-apply its residual
+                    real_ids = jnp.asarray([c for c, _ in chunk], jnp.int32)
+                    for k in self.ef:
+                        self.ef[k] = self.ef[k].at[real_ids].set(
+                            new_rows[k][:len(chunk)]
+                        )
+                else:
+                    models, losses = self._batch_fn(storage, cids, rnds)
                 for j, (c, _) in enumerate(chunk):
                     m = jax.tree_util.tree_map(lambda x: x[j], models)
                     self.trained[(base, c)] = (m, float(losses[j]))
@@ -505,6 +552,7 @@ def run_async_training(
     trace: ClientTrace, data_fn, init_key, *, num_clients: int,
     flushes: int, wire: bool = True,
     log: Optional[Callable[[str], None]] = None,
+    strategy=None, ste: bool = False,
 ) -> Tuple[Any, List[Dict[str, Any]], AsyncRunner]:
     """Async mirror of :func:`repro.federated.engine.run_training_vectorized`.
 
@@ -512,10 +560,13 @@ def run_async_training(
     ``(final storage, history, runner)`` — one history row per flush, with
     virtual-clock timing, staleness distribution, and (``wire=True``) the
     cumulative :class:`~repro.federated.accounting.AsyncWireStats` ledger.
+    ``strategy``/``ste`` train under a zoo compression strategy (§12); the
+    runner's per-client error-feedback residuals are on ``runner.ef``.
     """
     runner = AsyncRunner(
         family, cfg, omc, sim, acfg, trace, num_clients=num_clients,
         data_fn=data_fn, init_key=init_key, wire=wire,
+        strategy=strategy, ste=ste,
     )
     for i in range(flushes):
         runner.run_until(flushes=1)

@@ -211,7 +211,31 @@ def sample_tiered_cohort(
 
 
 def _run_cohort(one, server_f32, batches, round_index, ids,
-                client_chunk: Optional[int]):
+                client_chunk: Optional[int], ef_rows=None):
+    """vmap (or chunked lax.map) of the client body over one tier segment.
+
+    ``ef_rows`` (a ``{name: [q, *shape]}`` dict of error-feedback residual
+    rows, DESIGN.md §12) switches to the residual-threading client
+    signature and adds the updated rows as a third output."""
+    if ef_rows is not None:
+        run3 = lambda b, c, e: one(server_f32, b, round_index, c, e)
+        if client_chunk and ids.shape[0] > client_chunk:
+            g = ids.shape[0] // client_chunk
+            bs = jax.tree_util.tree_map(
+                lambda x: x.reshape((g, client_chunk) + x.shape[1:]), batches
+            )
+            cs = ids.reshape(g, client_chunk)
+            es = jax.tree_util.tree_map(
+                lambda x: x.reshape((g, client_chunk) + x.shape[1:]), ef_rows
+            )
+            models, losses, rows = jax.lax.map(
+                lambda xs: jax.vmap(run3)(*xs), (bs, cs, es)
+            )
+            unchunk = lambda x: x.reshape((-1,) + x.shape[2:])
+            return (jax.tree_util.tree_map(unchunk, models),
+                    losses.reshape(-1),
+                    jax.tree_util.tree_map(unchunk, rows))
+        return jax.vmap(run3)(batches, ids, ef_rows)
     run = lambda b, c: one(server_f32, b, round_index, c)
     if client_chunk and ids.shape[0] > client_chunk:
         # scan of vmapped blocks: same results, bounded live memory
@@ -239,6 +263,8 @@ def make_round_fn(
     spec: CohortSpec,
     data_fn: Callable[[Any, Any, Any], Any],
     data_mode: str = "vmap",
+    strategy=None,
+    ste: bool = False,
 ):
     """Build the engine's compiled round.
 
@@ -257,11 +283,21 @@ def make_round_fn(
     synthetic tasks and partitioned batch fns are); ``"host"`` takes
     pre-stacked per-tier batches as an extra argument, for data sources
     that cannot be traced (:func:`run_round_vectorized` stacks them).
+
+    ``strategy``/``ste`` train under a zoo compression strategy
+    (DESIGN.md §12): every tier's client body applies the strategy's qdq
+    under its own tier OMC config.  When the strategy threads an
+    error-feedback residual, the round program takes the population
+    residual state ``ef`` as a final argument and returns the updated
+    state as a fourth output — gather, per-client update, and the
+    alive-masked scatter all stay inside the one compiled program.
     """
     if data_mode not in ("vmap", "host"):
         raise ValueError(f"data_mode must be 'vmap' or 'host', got {data_mode!r}")
+    takes_ef = simulate.ef_lib.takes_residual(omc, strategy)
     ones = [
-        simulate.make_client_fn(family, cfg, specs, omc_t, sim)
+        simulate.make_client_fn(family, cfg, specs, omc_t, sim,
+                                strategy, ste, takes_residual=takes_ef)
         for omc_t in spec.tier_omcs(omc)
     ]
     steps = jnp.arange(sim.local_steps)
@@ -292,43 +328,76 @@ def make_round_fn(
         loss = (loss_c * w).sum() / jnp.maximum(n_alive, 1.0)
         return new_storage, loss, n_alive
 
-    if data_mode == "vmap":
-
-        @jax.jit
-        def round_fn(storage, ids_per_tier, alive, round_index):
-            server_f32 = decompress_tree(storage)
-            models, losses = [], []
-            for one, ids_t in zip(ones, ids_per_tier):
+    def body(storage, ids_per_tier, batches_per_tier, alive, round_index, ef):
+        server_f32 = decompress_tree(storage)
+        models, losses, rows = [], [], []
+        for t, (one, ids_t) in enumerate(zip(ones, ids_per_tier)):
+            if batches_per_tier is None:
                 batches = jax.vmap(
                     lambda c: jax.vmap(
                         lambda s: data_fn(c, round_index, s)
                     )(steps)
                 )(ids_t)
+            else:
+                batches = batches_per_tier[t]
+            if takes_ef:
+                rows_t = {k: v[ids_t] for k, v in ef.items()}
+                m, l, nr = _run_cohort(one, server_f32, batches, round_index,
+                                       ids_t, spec.client_chunk, rows_t)
+                rows.append(nr)
+            else:
                 m, l = _run_cohort(one, server_f32, batches, round_index,
                                    ids_t, spec.client_chunk)
-                models.append(m)
-                losses.append(l)
-            stacked = jax.tree_util.tree_map(
-                lambda *xs: jnp.concatenate(xs, 0), *models
-            )
-            return finish(server_f32, stacked, jnp.concatenate(losses), alive)
-
-        return round_fn
-
-    @jax.jit
-    def round_fn_host(storage, ids_per_tier, batches_per_tier, alive,
-                      round_index):
-        server_f32 = decompress_tree(storage)
-        models, losses = [], []
-        for one, ids_t, batches in zip(ones, ids_per_tier, batches_per_tier):
-            m, l = _run_cohort(one, server_f32, batches, round_index, ids_t,
-                               spec.client_chunk)
             models.append(m)
             losses.append(l)
         stacked = jax.tree_util.tree_map(
             lambda *xs: jnp.concatenate(xs, 0), *models
         )
-        return finish(server_f32, stacked, jnp.concatenate(losses), alive)
+        out = finish(server_f32, stacked, jnp.concatenate(losses), alive)
+        if not takes_ef:
+            return out
+        # scatter the cohort's updated residual rows back into the
+        # population state; dead clients keep their previous residual
+        # (they never uploaded — the loop path skips them entirely)
+        ids_all = jnp.concatenate(list(ids_per_tier), 0)
+        new_ef = {}
+        for k, old in ef.items():
+            nr = jnp.concatenate([r[k] for r in rows], 0)
+            keep = alive.reshape((-1,) + (1,) * (nr.ndim - 1))
+            new_ef[k] = old.at[ids_all].set(jnp.where(keep, nr, old[ids_all]))
+        return out + (new_ef,)
+
+    if data_mode == "vmap":
+        if takes_ef:
+
+            @jax.jit
+            def round_fn_ef(storage, ids_per_tier, alive, round_index, ef):
+                return body(storage, ids_per_tier, None, alive, round_index,
+                            ef)
+
+            return round_fn_ef
+
+        @jax.jit
+        def round_fn(storage, ids_per_tier, alive, round_index):
+            return body(storage, ids_per_tier, None, alive, round_index, None)
+
+        return round_fn
+
+    if takes_ef:
+
+        @jax.jit
+        def round_fn_host_ef(storage, ids_per_tier, batches_per_tier, alive,
+                             round_index, ef):
+            return body(storage, ids_per_tier, batches_per_tier, alive,
+                        round_index, ef)
+
+        return round_fn_host_ef
+
+    @jax.jit
+    def round_fn_host(storage, ids_per_tier, batches_per_tier, alive,
+                      round_index):
+        return body(storage, ids_per_tier, batches_per_tier, alive,
+                    round_index, None)
 
     return round_fn_host
 
@@ -369,6 +438,9 @@ def run_round_vectorized(
     round_fn=None,
     wire_table: Optional[accounting.WireTable] = None,
     data_mode: str = "vmap",
+    strategy=None,
+    ste: bool = False,
+    ef=None,
 ) -> Tuple[Any, Dict[str, float]]:
     """One vectorized round.  Returns (new server storage, metrics).
 
@@ -377,25 +449,32 @@ def run_round_vectorized(
     dropping them — zero-weight terms vanish exactly), the server
     interpolates toward the cohort mean and re-compresses.  Pass a cached
     ``round_fn`` (from :func:`make_round_fn`) when looping — building it
-    here costs a compile.
+    here costs a compile.  ``strategy``/``ste``/``ef`` mirror the loop path
+    (§12); the error-feedback state dict is updated in place.
     """
+    takes_ef = simulate.ef_lib.takes_residual(omc, strategy)
     if round_fn is None:
         round_fn = make_round_fn(family, cfg, specs, omc, sim, spec, data_fn,
-                                 data_mode)
+                                 data_mode, strategy=strategy, ste=ste)
+    if takes_ef and ef is None:
+        raise ValueError(
+            f"strategy {strategy.label!r} uses error feedback: pass the "
+            f"ef= state (repro.compress.feedback.init_ef_state)"
+        )
     ids_per_tier = sample_tiered_cohort(key, spec, round_index)
     alive = cohort_lib.survival_mask(key, spec.plan, round_index)
 
+    args = [server_params, ids_per_tier]
     if data_mode == "host":
-        batches = _host_batches(data_fn, ids_per_tier, round_index,
-                                sim.local_steps)
-        new_storage, loss, n_alive = round_fn(
-            server_params, ids_per_tier, batches, alive,
-            jnp.int32(round_index),
-        )
+        args.append(_host_batches(data_fn, ids_per_tier, round_index,
+                                  sim.local_steps))
+    args += [alive, jnp.int32(round_index)]
+    if takes_ef:
+        new_storage, loss, n_alive, new_ef = round_fn(*args, ef)
+        for k in ef:
+            ef[k] = new_ef[k]
     else:
-        new_storage, loss, n_alive = round_fn(
-            server_params, ids_per_tier, alive, jnp.int32(round_index)
-        )
+        new_storage, loss, n_alive = round_fn(*args)
 
     n_alive = int(n_alive)
     metrics: Dict[str, float] = dict(
@@ -406,7 +485,8 @@ def run_round_vectorized(
     if wire_table is not None:
         metrics.update(
             round_wire_metrics(wire_table, omc, spec.tier_omcs(omc),
-                               ids_per_tier, alive, round_index)
+                               ids_per_tier, alive, round_index,
+                               strategy=strategy)
         )
     return new_storage, metrics
 
@@ -418,20 +498,28 @@ def round_wire_metrics(
     ids_per_tier: Sequence[jax.Array],
     alive: jax.Array,
     round_index,
+    strategy=None,
 ) -> Dict[str, int]:
     """Exact per-round wire bytes: every invited client downloads the full
     compressed server state; every *surviving* client uploads its
-    PPQ-masked, tier-format transport payload."""
+    PPQ-masked, tier-format transport payload.  With ``strategy`` the
+    per-client upload sizes come from the strategy's plan (§12) — raises
+    for data-dependent strategies (train those with ``wire=False``)."""
     invited = sum(int(np.asarray(i).shape[0]) for i in ids_per_tier)
-    down = table.download_bytes(omc) * invited
+    down = accounting.download_bytes_train(table, omc, strategy) * invited
     alive_np = np.asarray(alive, bool)
     up = 0
     off = 0
     for omc_t, ids_t in zip(tier_omcs, ids_per_tier):
         q = int(np.asarray(ids_t).shape[0])
-        per_client = accounting.cohort_upload_bytes(
-            table, omc_t, round_index, ids_t
-        )
+        if strategy is None:
+            per_client = accounting.cohort_upload_bytes(
+                table, omc_t, round_index, ids_t
+            )
+        else:
+            per_client = accounting.cohort_upload_bytes_strategy(
+                table, omc_t, strategy, round_index, ids_t
+            )
         up += int(per_client[alive_np[off:off + q]].sum())
         off += q
     return dict(down_bytes=int(down), up_bytes=int(up))
@@ -452,6 +540,9 @@ def run_training_vectorized(
     log: Optional[Callable[[str], None]] = None,
     data_mode: str = "vmap",
     wire: bool = True,
+    strategy=None,
+    ste: bool = False,
+    ef=None,
 ):
     """Vectorized mirror of :func:`repro.federated.simulate.run_training`.
 
@@ -461,12 +552,16 @@ def run_training_vectorized(
     accounting costs a host round-trip per client), the engine's batched
     accounting is a few ms per round, so it is on by default; pass
     ``wire=False`` for history rows schema-identical to the loop's default.
+    ``strategy``/``ste``/``ef`` mirror the loop path (§12).
     """
     specs = family.param_specs(cfg)
     params = family.init(init_key, cfg) if init_params is None else init_params
     storage = compress_params(params, specs, omc) if omc.enabled else params
     round_fn = make_round_fn(family, cfg, specs, omc, sim, spec, data_fn,
-                             data_mode)
+                             data_mode, strategy=strategy, ste=ste)
+    if ef is None and simulate.ef_lib.takes_residual(omc, strategy):
+        ef = simulate.ef_lib.init_ef_state(params, specs, omc,
+                                           spec.plan.num_clients)
     table = accounting.build_wire_table(params, specs, omc) if wire else None
     key = jax.random.fold_in(init_key, 0xC047)
     history = []
@@ -474,6 +569,7 @@ def run_training_vectorized(
         storage, metrics = run_round_vectorized(
             family, cfg, specs, omc, sim, storage, data_fn, spec, r, key,
             round_fn=round_fn, wire_table=table, data_mode=data_mode,
+            strategy=strategy, ste=ste, ef=ef,
         )
         if eval_fn is not None and (r + 1) % eval_every == 0:
             metrics["eval"] = float(eval_fn(decompress_tree(storage), r))

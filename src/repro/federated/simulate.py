@@ -26,6 +26,18 @@ Client failures / stragglers drop reports through
 barrier-synchronous; the event-driven buffered-aggregation runtime
 (:mod:`repro.federated.async_engine`, DESIGN.md §10) lifts the barrier for
 straggler-dominated fleets while reusing this module's ``make_client_fn``.
+
+Every entry point also accepts ``strategy=`` (a
+:class:`repro.compress.CompressionStrategy`) to train under a zoo
+compressor instead of the hardcoded OMC qdq — DESIGN.md §12 is the
+contract.  ``strategy=None`` is bit-for-bit today's path, and
+``strategy=get_strategy("omc")`` (matching ``omc``) is *gated* to stay
+bit-identical to it (``tests/test_train_strategy.py``).  Dense strategies
+replace the masked qdq view in both directions; sparse upload-only
+strategies (top-k / ternary / pipeline) train on the dense download and
+compress the *update* ``trained - received`` on the way back up, with an
+optional per-client error-feedback residual
+(:mod:`repro.compress.feedback`).
 """
 
 from __future__ import annotations
@@ -36,6 +48,8 @@ from typing import Any, Callable, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from typing import TYPE_CHECKING
+
 from repro.core.omc import OMCConfig, qdq_pvt_leaf
 from repro.core.partial import ppq_mask
 from repro.core.policy import path_str
@@ -44,7 +58,27 @@ from repro.models.common import IDENTITY_MAT, ParamSpec
 
 from . import accounting
 from . import cohort as cohort_lib
-from .state import compress_params
+from .state import compress_params, n_stack_axes
+
+if TYPE_CHECKING:  # pragma: no cover - annotations only
+    from repro.compress import CompressionStrategy
+
+
+def _ef():
+    # lazy: repro.compress pulls in the api wire codecs, which import this
+    # package — a module-level import here would be circular
+    from repro.compress import feedback
+    return feedback
+
+
+class _LazyEF:
+    """Module-level stand-in for :mod:`repro.compress.feedback`."""
+
+    def __getattr__(self, name):
+        return getattr(_ef(), name)
+
+
+ef_lib = _LazyEF()
 
 
 def _selected_names(params_f32, specs, omc: OMCConfig):
@@ -53,9 +87,19 @@ def _selected_names(params_f32, specs, omc: OMCConfig):
     return accounting.selected_names(params_f32, specs, omc)
 
 
-def client_view(params_f32, specs, omc: OMCConfig, round_index, client_id):
-    """Apply the client's PPQ-masked quantize->dequantize(+PVT) view."""
+def client_view(params_f32, specs, omc: OMCConfig, round_index, client_id,
+                strategy: Optional[CompressionStrategy] = None,
+                ste: bool = False):
+    """Apply the client's PPQ-masked quantize->dequantize(+PVT) view.
+
+    With a zoo ``strategy`` the masked variables pass through its
+    ``train_qdq_leaf`` (or the STE variant) instead of the hardcoded OMC
+    qdq — same PPQ mask, same selection, only the lossy transform swaps
+    (DESIGN.md §12).  Upload-only strategies never compress the download
+    direction, so the view is the identity for them."""
     if not omc.enabled:
+        return params_f32
+    if strategy is not None and strategy.upload_only:
         return params_f32
     names = _selected_names(params_f32, specs, omc)
     if not names:
@@ -68,11 +112,67 @@ def client_view(params_f32, specs, omc: OMCConfig, round_index, client_id):
         i = index.get(path_str(path))
         if i is None:
             return leaf
-        return jnp.where(mask[i], qdq_pvt_leaf(leaf, omc), leaf)
+        if strategy is None:
+            q = qdq_pvt_leaf(leaf, omc)
+        else:
+            qdq = strategy.train_qdq_ste_leaf if ste else strategy.train_qdq_leaf
+            q = qdq(leaf, batch_axes=n_stack_axes(spec, leaf))
+        return jnp.where(mask[i], q, leaf)
 
     return jax.tree_util.tree_map_with_path(
         f, specs, params_f32, is_leaf=lambda s: isinstance(s, ParamSpec)
     )
+
+
+def strategy_upload(trained, received, residual, specs, omc: OMCConfig,
+                    strategy: CompressionStrategy, round_index, client_id,
+                    ste: bool = False):
+    """Upload-direction rule for sparse (upload-only) strategies (§12).
+
+    The client sends its *update* ``delta = trained - received`` through
+    the strategy's qdq under its PPQ mask; the server-visible model is
+    ``received + sent``.  With error feedback, ``residual`` (this client's
+    rows of the :mod:`repro.compress.feedback` state, ``{name: array}``)
+    is added pre-compression and the dropped part is returned as the new
+    residual; without it the second return is ``residual`` unchanged.
+
+    Returns ``(out_model, new_residual)``; traceable (jit/vmap-safe).
+    """
+    if not omc.enabled:
+        return trained, dict(residual or {})
+    names = _selected_names(trained, specs, omc)
+    if not names:
+        return trained, dict(residual or {})
+    mask = ppq_mask(omc.ppq_key(), round_index, client_id, len(names),
+                    omc.quantize_fraction)
+    index = {n: i for i, n in enumerate(names)}
+    use_ef = bool(strategy.error_feedback) and residual is not None
+    new_residual: Dict[str, Any] = {}
+
+    def f(path, spec, t, rcv):
+        name = path_str(path)
+        i = index.get(name)
+        if i is None:
+            return t  # unselected vars travel f32: arrive exact
+        delta = t - rcv
+        ax = n_stack_axes(spec, t)
+        if use_ef:
+            sent, resid = ef_lib.compensate_leaf(
+                strategy, delta, residual[name], mask[i],
+                batch_axes=ax, ste=ste,
+            )
+            new_residual[name] = resid
+        else:
+            qdq = (strategy.train_qdq_ste_leaf if ste
+                   else strategy.train_qdq_leaf)
+            sent = jnp.where(mask[i], qdq(delta, batch_axes=ax), delta)
+        return rcv + sent
+
+    out = jax.tree_util.tree_map_with_path(
+        f, specs, trained, received,
+        is_leaf=lambda s: isinstance(s, ParamSpec),
+    )
+    return out, (new_residual if use_ef else dict(residual or {}))
 
 
 @dataclasses.dataclass
@@ -82,18 +182,32 @@ class SimConfig:
     server_lr: float = 1.0
 
 
-def make_client_fn(family, cfg, specs, omc: OMCConfig, sim: SimConfig):
-    """Un-jitted: (server_f32, batch_stack, round, client_id) -> client model.
+def make_client_fn(family, cfg, specs, omc: OMCConfig, sim: SimConfig,
+                   strategy: Optional[CompressionStrategy] = None,
+                   ste: bool = False,
+                   takes_residual: Optional[bool] = None):
+    """Un-jitted single-client round body.
 
-    The single-client round body.  The reference loop jits it as-is
-    (:func:`make_client_update`); the vectorized engine ``vmap``s it over a
-    stacked cohort (:mod:`repro.federated.engine`) — one definition, two
-    execution strategies, which is what the engine's equivalence guarantee
-    rests on (DESIGN.md §9)."""
+    Signature without error feedback:
+    ``(server_f32, batch_stack, round, client_id) -> (model, loss)``;
+    with it (``takes_residual``) a residual-rows dict is threaded through:
+    ``(..., residual) -> (model, loss, new_residual)``.
 
-    def client_update(server_f32, batches, round_index, client_id):
-        eff = client_view(server_f32, specs, omc, round_index, client_id)
+    The reference loop jits it as-is (:func:`make_client_update`); the
+    vectorized engine ``vmap``s it over a stacked cohort
+    (:mod:`repro.federated.engine`) — one definition, two execution
+    strategies, which is what the engine's equivalence guarantee rests on
+    (DESIGN.md §9).  ``strategy``/``ste`` select the §12 training-under-
+    strategy semantics; ``takes_residual`` defaults to
+    :func:`repro.compress.feedback.takes_residual` and exists so the
+    engine can force one signature across heterogeneous tiers (a tier
+    whose ``omc`` is disabled passes the residual rows through
+    unchanged)."""
+    if takes_residual is None:
+        takes_residual = ef_lib.takes_residual(omc, strategy)
+    sparse = strategy is not None and strategy.upload_only
 
+    def _train(eff, batches):
         def step(params, batch):
             loss, g = jax.value_and_grad(
                 lambda p: family.loss(cfg, p, batch, IDENTITY_MAT)
@@ -103,17 +217,50 @@ def make_client_fn(family, cfg, specs, omc: OMCConfig, sim: SimConfig):
             )
             return params, loss
 
-        trained, losses = jax.lax.scan(step, eff, batches)
-        # transport compression: re-quantize under the same client mask
-        out = client_view(trained, specs, omc, round_index, client_id)
+        return jax.lax.scan(step, eff, batches)
+
+    if takes_residual:
+
+        def client_update(server_f32, batches, round_index, client_id,
+                          residual):
+            eff = client_view(server_f32, specs, omc, round_index, client_id,
+                              strategy, ste)
+            trained, losses = _train(eff, batches)
+            out, new_residual = strategy_upload(
+                trained, eff, residual, specs, omc, strategy,
+                round_index, client_id, ste,
+            )
+            return out, losses.mean(), new_residual
+
+        return client_update
+
+    def client_update(server_f32, batches, round_index, client_id):
+        eff = client_view(server_f32, specs, omc, round_index, client_id,
+                          strategy, ste)
+        trained, losses = _train(eff, batches)
+        if sparse and omc.enabled:
+            # sparse strategy without EF: compress the raw update
+            out, _ = strategy_upload(
+                trained, eff, None, specs, omc, strategy,
+                round_index, client_id, ste,
+            )
+        else:
+            # transport compression: re-quantize under the same client mask
+            out = client_view(trained, specs, omc, round_index, client_id,
+                              strategy, ste)
         return out, losses.mean()
 
     return client_update
 
 
-def make_client_update(family, cfg, specs, omc: OMCConfig, sim: SimConfig):
-    """jitted: (server_f32, batch_stack, round, client_id) -> client model."""
-    return jax.jit(make_client_fn(family, cfg, specs, omc, sim))
+def make_client_update(family, cfg, specs, omc: OMCConfig, sim: SimConfig,
+                       strategy: Optional[CompressionStrategy] = None,
+                       ste: bool = False,
+                       takes_residual: Optional[bool] = None):
+    """jitted :func:`make_client_fn` (same signature rules)."""
+    return jax.jit(make_client_fn(
+        family, cfg, specs, omc, sim, strategy, ste, takes_residual
+    ))
 
 
 def run_round(
@@ -129,6 +276,9 @@ def run_round(
     key: jax.Array,
     client_update=None,
     wire_table=None,
+    strategy: Optional[CompressionStrategy] = None,
+    ste: bool = False,
+    ef=None,
 ) -> Tuple[Any, Dict[str, float]]:
     """One faithful federated round.  Returns (new server storage, metrics).
 
@@ -136,12 +286,22 @@ def run_round(
     exact per-round ``down_bytes`` / ``up_bytes`` to the metrics, computed
     one scalar PPQ mask at a time — the loop-granularity counterpart of the
     engine's batched accounting, asserted byte-identical in the engine
-    equivalence tests."""
+    equivalence tests.  ``strategy``/``ste`` train under a zoo compressor
+    (§12); ``ef`` is the population error-feedback state
+    (:func:`repro.compress.feedback.init_ef_state`), updated in place for
+    the surviving cohort rows."""
     server_f32 = decompress_tree(server_params)
     ids = cohort_lib.sample_cohort(key, plan, round_index)
     alive = cohort_lib.survival_mask(key, plan, round_index)
+    takes_ef = ef_lib.takes_residual(omc, strategy)
     if client_update is None:
-        client_update = make_client_update(family, cfg, specs, omc, sim)
+        client_update = make_client_update(family, cfg, specs, omc, sim,
+                                           strategy, ste)
+    if takes_ef and ef is None:
+        raise ValueError(
+            f"strategy {strategy.label!r} uses error feedback: pass the "
+            f"ef= state (repro.compress.feedback.init_ef_state)"
+        )
 
     models, weights, losses = [], [], []
     up_bytes = 0
@@ -153,15 +313,28 @@ def run_round(
             lambda *xs: jnp.stack(xs),
             *[data_fn(cid, round_index, s) for s in range(sim.local_steps)],
         )
-        m, l = client_update(server_f32, batches,
-                             jnp.int32(round_index), jnp.int32(cid))
+        if takes_ef:
+            rows = {k: v[cid] for k, v in ef.items()}
+            m, l, new_rows = client_update(server_f32, batches,
+                                           jnp.int32(round_index),
+                                           jnp.int32(cid), rows)
+            for k in ef:
+                ef[k] = ef[k].at[cid].set(new_rows[k])
+        else:
+            m, l = client_update(server_f32, batches,
+                                 jnp.int32(round_index), jnp.int32(cid))
         models.append(m)
         weights.append(1.0)
         losses.append(float(l))
         if wire_table is not None:
-            up_bytes += accounting.client_upload_bytes(
-                wire_table, omc, round_index, cid
-            )
+            if strategy is None:
+                up_bytes += accounting.client_upload_bytes(
+                    wire_table, omc, round_index, cid
+                )
+            else:
+                up_bytes += accounting.client_upload_bytes_strategy(
+                    wire_table, omc, strategy, round_index, cid
+                )
 
     w = jnp.asarray(weights, jnp.float32)
     stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *models)
@@ -178,7 +351,8 @@ def run_round(
     )
     if wire_table is not None:
         metrics["down_bytes"] = (
-            wire_table.download_bytes(omc) * plan.cohort_size
+            accounting.download_bytes_train(wire_table, omc, strategy)
+            * plan.cohort_size
         )
         metrics["up_bytes"] = int(up_bytes)
     return new_storage, metrics
@@ -192,15 +366,25 @@ def run_training(
     init_params=None,
     log: Optional[Callable[[str], None]] = None,
     wire: bool = False,
+    strategy: Optional[CompressionStrategy] = None,
+    ste: bool = False,
+    ef=None,
 ):
     """Full simulation loop.  Returns (final storage params, history).
 
     ``wire=True`` adds exact per-round wire-byte accounting to the history
-    rows (see :func:`run_round`)."""
+    rows (see :func:`run_round`).  ``strategy``/``ste`` train under a zoo
+    compressor (§12).  When the strategy uses error feedback, pass
+    ``ef=feedback.init_ef_state(...)`` to observe the final residuals —
+    the dict is updated in place — or leave it ``None`` to have one
+    allocated internally."""
     specs = family.param_specs(cfg)
     params = family.init(init_key, cfg) if init_params is None else init_params
     storage = compress_params(params, specs, omc) if omc.enabled else params
-    client_update = make_client_update(family, cfg, specs, omc, sim)
+    client_update = make_client_update(family, cfg, specs, omc, sim,
+                                       strategy, ste)
+    if ef is None and ef_lib.takes_residual(omc, strategy):
+        ef = ef_lib.init_ef_state(params, specs, omc, plan.num_clients)
     wire_table = accounting.build_wire_table(params, specs, omc) if wire else None
     key = jax.random.fold_in(init_key, 0xC047)
     history = []
@@ -208,6 +392,7 @@ def run_training(
         storage, metrics = run_round(
             family, cfg, specs, omc, sim, storage, data_fn, plan, r, key,
             client_update=client_update, wire_table=wire_table,
+            strategy=strategy, ste=ste, ef=ef,
         )
         if eval_fn is not None and (r + 1) % eval_every == 0:
             metrics["eval"] = float(eval_fn(decompress_tree(storage), r))

@@ -1,0 +1,181 @@
+"""Error-feedback invariants: unit tests + hypothesis property tests.
+
+The residual contract behind DESIGN.md §12: at every send,
+``compensate_leaf`` splits the compensated delta ``comp = delta + residual``
+into ``(sent, residual')`` with ``sent + residual' == comp`` — nothing is
+ever silently dropped, only deferred.  Property-tested here (via the
+optional-hypothesis shim, so the unit half still runs without hypothesis):
+exact reconstruction for identity-valued top-k, bounded residual norm, and
+the no-op guarantee for dense strategies.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_stub import HAVE_HYPOTHESIS, given, settings, st
+from repro.compress import feedback, get_strategy
+from repro.core.omc import OMCConfig
+from repro.models import conformer as cf
+
+OMC = OMCConfig.parse("S1E3M7")
+CFG = cf.ConformerConfig(
+    n_layers=1, d_model=16, n_heads=2, d_ff=32, n_classes=8, d_in=4
+)
+
+pytestmark = pytest.mark.tier1
+
+
+def _arr(values):
+    return jnp.asarray(np.asarray(values, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Unit half: state lifecycle
+# ---------------------------------------------------------------------------
+
+
+def test_takes_residual_matches_strategy_flags():
+    """EF state is owed exactly to enabled sparse strategies with the
+    error_feedback flag up; dense strategies and disabled OMC get none."""
+    assert feedback.takes_residual(OMC, get_strategy("topk"))
+    assert feedback.takes_residual(OMC, get_strategy("ternary"))
+    assert feedback.takes_residual(OMC, get_strategy("pipeline"))
+    assert not feedback.takes_residual(OMC, None)
+    assert not feedback.takes_residual(OMC, get_strategy("omc"))
+    assert not feedback.takes_residual(
+        OMC, get_strategy("topk", error_feedback=False))
+    off = OMCConfig.parse("S1E8M23", quantize_fraction=1.0)  # identity: disabled
+    assert not off.enabled
+    assert not feedback.takes_residual(off, get_strategy("topk"))
+
+
+def test_init_gather_scatter_roundtrip():
+    specs = cf.param_specs(CFG)
+    params = cf.init(jax.random.PRNGKey(0), CFG)
+    ef = feedback.init_ef_state(params, specs, OMC, num_clients=5)
+    assert ef  # the conformer has selected (weight) variables
+    for name, v in ef.items():
+        assert v.shape[0] == 5 and v.dtype == jnp.float32
+        assert not np.asarray(v).any()  # zero-initialised
+    assert feedback.total_norm(ef) == 0.0
+    assert feedback.ef_bytes(ef) == sum(4 * v.size for v in ef.values())
+
+    ids = jnp.asarray([3, 1])
+    rows = feedback.gather_rows(ef, ids)
+    rows = {k: v + 1.0 for k, v in rows.items()}
+    ef2 = feedback.scatter_rows(ef, ids, rows)
+    for k, v in ef2.items():
+        got = np.asarray(v)
+        assert got[1].min() == 1.0 and got[3].min() == 1.0
+        assert not got[[0, 2, 4]].any()
+    # norms reflect the scatter
+    assert feedback.total_norm(ef2) > 0.0
+    assert set(feedback.ef_norms(ef2)) == set(ef2)
+
+
+def test_compensate_respects_ppq_mask_bit():
+    """mask_bit=False (PPQ left this var f32) sends comp verbatim and the
+    residual fully drains."""
+    strategy = get_strategy("topk", density=0.25)
+    delta = _arr([1.0, -2.0, 0.5, 4.0])
+    residual = _arr([0.25, 0.0, -0.5, 0.0])
+    sent, new_r = feedback.compensate_leaf(
+        strategy, delta, residual, jnp.asarray(False))
+    np.testing.assert_array_equal(np.asarray(sent),
+                                  np.asarray(delta + residual))
+    assert not np.asarray(new_r).any()
+
+
+def test_dense_strategy_is_ef_noop():
+    """A dense strategy run through compensate_leaf leaves no residual worth
+    keeping: sent == qdq(comp) everywhere and the residual is pure
+    quantization error, bounded by one S1E3M7 step."""
+    strategy = get_strategy("omc")
+    delta = jnp.asarray(
+        jax.random.normal(jax.random.PRNGKey(1), (32,)), jnp.float32)
+    sent, new_r = feedback.compensate_leaf(
+        strategy, delta, jnp.zeros_like(delta), jnp.asarray(True))
+    np.testing.assert_allclose(np.asarray(sent + new_r), np.asarray(delta),
+                               rtol=0, atol=1e-6)
+    # what's left behind is pure qdq rounding: within a relative half-ulp of
+    # the S1E3M7 mantissa (plus PVT headroom), not accumulated signal
+    bound = 0.02 * float(np.abs(np.asarray(delta)).max())
+    assert np.abs(np.asarray(new_r)).max() <= bound
+
+
+# ---------------------------------------------------------------------------
+# Property half (skips without hypothesis; see tests/_hypothesis_stub.py)
+# ---------------------------------------------------------------------------
+
+floats_st = st.floats(-16.0, 16.0, allow_nan=False, width=32) \
+    if HAVE_HYPOTHESIS else None
+vec_st = st.lists(floats_st, min_size=4, max_size=96) if HAVE_HYPOTHESIS \
+    else None
+
+
+@settings(max_examples=40, deadline=None)
+@given(vec_st, st.integers(1, 4))
+def test_topk_reconstruction_is_exact(values, denom):
+    """Identity-valued top-k: sent + residual' reconstructs comp bit for
+    bit — kept coordinates ship verbatim, dropped ones move whole into the
+    residual."""
+    strategy = get_strategy("topk", density=1.0 / denom)
+    comp = _arr(values)
+    sent, new_r = feedback.compensate_leaf(
+        strategy, comp, jnp.zeros_like(comp), jnp.asarray(True))
+    np.testing.assert_array_equal(np.asarray(sent) + np.asarray(new_r),
+                                  np.asarray(comp))
+    # and each coordinate went one way or the other, never both
+    assert not (np.asarray(sent) * np.asarray(new_r)).any()
+
+
+@settings(max_examples=40, deadline=None)
+@given(vec_st, st.integers(0, 2**31 - 1))
+def test_ternary_reconstruction_within_float_eps(values, seed):
+    """Non-identity values (ternary scales): reconstruction holds to f32
+    rounding of the subtraction, not bitwise."""
+    strategy = get_strategy("ternary")
+    comp = _arr(values)
+    residual = jnp.asarray(
+        jax.random.normal(jax.random.PRNGKey(seed), comp.shape), jnp.float32)
+    total = comp + residual
+    sent, new_r = feedback.compensate_leaf(
+        strategy, comp, residual, jnp.asarray(True))
+    np.testing.assert_allclose(np.asarray(sent) + np.asarray(new_r),
+                               np.asarray(total), rtol=1e-6, atol=1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(vec_st, st.integers(2, 8))
+def test_topk_residual_norm_bounded(values, denom):
+    """Dropping the smallest-magnitude coordinates never grows the vector:
+    ||residual'|| <= ||comp||, with equality only when everything was
+    dropped."""
+    strategy = get_strategy("topk", density=1.0 / denom)
+    comp = _arr(values)
+    _, new_r = feedback.compensate_leaf(
+        strategy, comp, jnp.zeros_like(comp), jnp.asarray(True))
+    assert float(jnp.linalg.norm(new_r)) <= float(jnp.linalg.norm(comp)) + 1e-6
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 6))
+def test_residual_telescopes_across_rounds(seed, rounds):
+    """Over any number of sends, sum(sent) == sum(delta) - final residual:
+    the server is eventually owed exactly what the residual still holds."""
+    strategy = get_strategy("topk", density=0.25)
+    key = jax.random.PRNGKey(seed)
+    residual = jnp.zeros((24,), jnp.float32)
+    total_delta = jnp.zeros_like(residual)
+    total_sent = jnp.zeros_like(residual)
+    for r in range(rounds):
+        delta = jax.random.normal(jax.random.fold_in(key, r), (24,),
+                                  jnp.float32)
+        sent, residual = feedback.compensate_leaf(
+            strategy, delta, residual, jnp.asarray(True))
+        total_delta = total_delta + delta
+        total_sent = total_sent + sent
+    np.testing.assert_allclose(np.asarray(total_sent + residual),
+                               np.asarray(total_delta), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,295 @@
+"""Training under zoo strategies: equivalence gates across all three paths.
+
+The contract under test (DESIGN.md §12): every training path — the
+reference loop, the vectorized engine, and the async runtime — accepts a
+``strategy=`` and the following must hold:
+
+* ``get_strategy("omc")`` is **bit-identical** to the hardcoded OMC qdq
+  path: same server storage trees (codes, PVT scalars), same history rows,
+  same wire-byte ledgers.  The strategy seam costs nothing.
+* every zoo strategy trains equivalently on the loop and the engine at a
+  failure-prone cohort of 8 (batched-op reassociation tolerance on trees,
+  byte-exact wire accounting where the plan is shape-determined);
+* error-feedback residuals are per-client state: identical across paths,
+  checkpointable on the async runner, and required (a sparse EF strategy
+  without residual state is a hard error, not a silent drop).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.compress import feedback, get_strategy
+from repro.core.omc import OMCConfig
+from repro.core.store import decompress_tree, is_compressed
+from repro.data.synthetic import make_frame_task
+from repro.federated import accounting, async_engine, engine, simulate, traces
+from repro.federated.cohort import CohortPlan
+from repro.federated.state import compress_params
+from repro.models import conformer as cf
+
+CFG = cf.ConformerConfig(
+    n_layers=2, d_model=32, n_heads=4, d_ff=64, n_classes=16, d_in=8
+)
+OMC = OMCConfig.parse("S1E3M7")  # PPQ on: default quantize_fraction = 0.9
+SIM = simulate.SimConfig(local_steps=2, client_lr=0.1)
+PLAN = CohortPlan(num_clients=16, cohort_size=8, failure_rate=0.25)
+TASK = make_frame_task(d_in=CFG.d_in, n_classes=CFG.n_classes, seq_len=24,
+                       num_clients=PLAN.num_clients)
+DATA_FN = lambda c, r, s: TASK.batch(c, r, s, 4)
+
+C = 6  # async equivalence cohort: population == cohort == buffer goal
+
+
+def assert_trees_bit_identical(a_storage, b_storage):
+    """Storage trees agree bit for bit: codes, PVT scalars, raw leaves."""
+    la = jax.tree_util.tree_leaves(a_storage, is_leaf=is_compressed)
+    lb = jax.tree_util.tree_leaves(b_storage, is_leaf=is_compressed)
+    assert len(la) == len(lb)
+    for a, b in zip(la, lb):
+        if is_compressed(a):
+            assert is_compressed(b)
+            assert np.array_equal(np.asarray(a.codes), np.asarray(b.codes))
+            assert np.array_equal(np.asarray(a.s), np.asarray(b.s))
+            assert np.array_equal(np.asarray(a.b), np.asarray(b.b))
+        else:
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def assert_trees_close(a_f32, b_f32, max_abs=6e-3, mean_abs=1e-4):
+    for a, b in zip(jax.tree_util.tree_leaves(a_f32),
+                    jax.tree_util.tree_leaves(b_f32)):
+        d = np.abs(np.asarray(a) - np.asarray(b))
+        assert d.max() <= max_abs, d.max()
+        assert d.mean() <= mean_abs, d.mean()
+
+
+# ---------------------------------------------------------------------------
+# Tentpole gate: strategy="omc" is bit-identical to the hardcoded path
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.tier1
+def test_loop_omc_strategy_bit_identical():
+    """Reference loop: OMCQuantStrategy reproduces today's bits exactly —
+    storage trees, losses, and the per-round wire ledger."""
+    key = jax.random.PRNGKey(0)
+    base, hist0 = simulate.run_training(
+        cf, CFG, OMC, SIM, PLAN, DATA_FN, key, num_rounds=2,
+        eval_every=100, wire=True,
+    )
+    strat, hist1 = simulate.run_training(
+        cf, CFG, OMC, SIM, PLAN, DATA_FN, key, num_rounds=2,
+        eval_every=100, wire=True, strategy=get_strategy("omc"),
+    )
+    assert hist0 == hist1  # cohorts, losses, down_bytes, up_bytes — all of it
+    assert_trees_bit_identical(base, strat)
+
+
+@pytest.mark.tier1
+def test_engine_omc_strategy_bit_identical():
+    """Vectorized engine: same gate through the vmapped client body."""
+    key = jax.random.PRNGKey(0)
+    base, hist0 = engine.run_training_vectorized(
+        cf, CFG, OMC, SIM, engine.CohortSpec(PLAN), DATA_FN, key,
+        num_rounds=2, eval_every=100,
+    )
+    strat, hist1 = engine.run_training_vectorized(
+        cf, CFG, OMC, SIM, engine.CohortSpec(PLAN), DATA_FN, key,
+        num_rounds=2, eval_every=100, strategy=get_strategy("omc"),
+    )
+    assert hist0 == hist1
+    assert_trees_bit_identical(base, strat)
+
+
+@pytest.mark.tier1
+def test_async_omc_strategy_bit_identical():
+    """Async runtime at the degenerate trace: bit-identical storage and an
+    identical AsyncWireStats ledger snapshot."""
+    def run(strategy):
+        return async_engine.run_async_training(
+            cf, CFG, OMC, SIM, async_engine.AsyncConfig(buffer_goal=C),
+            traces.FixedTrace(latency=1.0), DATA_FN, jax.random.PRNGKey(0),
+            num_clients=C, flushes=2, wire=True, strategy=strategy,
+        )
+    st0, hist0, r0 = run(None)
+    st1, hist1, r1 = run(get_strategy("omc"))
+    assert hist0 == hist1
+    assert r0.stats.snapshot() == r1.stats.snapshot()
+    assert_trees_bit_identical(st0, st1)
+
+
+# ---------------------------------------------------------------------------
+# Zoo gate: every registered strategy, loop vs engine, cohort of 8
+# ---------------------------------------------------------------------------
+
+ZOO = {
+    "omc": lambda: get_strategy("omc"),
+    "topk": lambda: get_strategy("topk", density=0.25),
+    "ternary": lambda: get_strategy("ternary"),
+    "pipeline": lambda: get_strategy("pipeline"),
+}
+
+
+@pytest.mark.tier1
+@pytest.mark.parametrize("name", sorted(ZOO))
+def test_zoo_strategy_loop_engine_equivalence(name):
+    """Loop and engine agree under every zoo strategy: trees within the
+    batched-op tolerance, wire ledgers byte-exact (where shape-determined),
+    error-feedback residuals shared bit-for-bit between the paths."""
+    strategy = ZOO[name]()
+    # pipeline's DEFLATE stage is data-dependent: no shape-determined wire
+    # plan, so the accounting layer refuses it (tested below) — train wireless
+    wire = name != "pipeline"
+    key = jax.random.PRNGKey(0)
+    specs = cf.param_specs(CFG)
+    params = cf.init(key, CFG)
+    takes_ef = feedback.takes_residual(OMC, strategy)
+    if takes_ef:
+        ef_loop = feedback.init_ef_state(params, specs, OMC, PLAN.num_clients)
+        ef_eng = feedback.init_ef_state(params, specs, OMC, PLAN.num_clients)
+
+    ref, hist_l = simulate.run_training(
+        cf, CFG, OMC, SIM, PLAN, DATA_FN, key, num_rounds=2, eval_every=100,
+        wire=wire, strategy=strategy,
+        ef=ef_loop if takes_ef else None,
+    )
+    eng, hist_e = engine.run_training_vectorized(
+        cf, CFG, OMC, SIM, engine.CohortSpec(PLAN), DATA_FN, key,
+        num_rounds=2, eval_every=100, wire=wire, strategy=strategy,
+        ef=ef_eng if takes_ef else None,
+    )
+    for rl, re in zip(hist_l, hist_e):
+        assert rl["cohort"] == re["cohort"]
+        assert rl["dropped"] == re["dropped"]
+        assert abs(rl["loss"] - re["loss"]) < 1e-3
+        if wire:
+            assert rl["down_bytes"] == re["down_bytes"]
+            assert rl["up_bytes"] == re["up_bytes"]
+    assert_trees_close(decompress_tree(ref), decompress_tree(eng))
+    if takes_ef:
+        assert set(ef_loop) == set(ef_eng)
+        for k in ef_loop:
+            d = np.abs(np.asarray(ef_loop[k]) - np.asarray(ef_eng[k]))
+            assert d.max() <= 1e-6, (k, d.max())
+
+
+@pytest.mark.tier1
+def test_sparse_strategy_upload_cheaper_than_dense():
+    """The ledger shows sparsification: top-k at density 0.05 (5% of
+    coordinates, 8 bytes each) uploads fewer bytes per round than the dense
+    OMC plan (11 bits for every coordinate) for the same model."""
+    key = jax.random.PRNGKey(0)
+    _, h_omc = simulate.run_training(
+        cf, CFG, OMC, SIM, PLAN, DATA_FN, key, num_rounds=1,
+        eval_every=100, wire=True,
+    )
+    _, h_topk = simulate.run_training(
+        cf, CFG, OMC, SIM, PLAN, DATA_FN, key, num_rounds=1,
+        eval_every=100, wire=True,
+        strategy=get_strategy("topk", density=0.05),
+    )
+    assert h_topk[0]["up_bytes"] < h_omc[0]["up_bytes"]
+    # downloads are the at-rest OMC state either way (upload-only strategy)
+    assert h_topk[0]["down_bytes"] == h_omc[0]["down_bytes"]
+
+
+@pytest.mark.tier1
+def test_pipeline_wire_accounting_refused():
+    """Data-dependent plans (DEFLATE) cannot be shape-priced: wire=True under
+    the pipeline strategy is a loud ValueError, not a silent wrong number."""
+    with pytest.raises(ValueError, match="[Dd]ata-dependent|DEFLATE|pipeline"):
+        simulate.run_training(
+            cf, CFG, OMC, SIM, PLAN, DATA_FN, jax.random.PRNGKey(0),
+            num_rounds=1, eval_every=100, wire=True,
+            strategy=ZOO["pipeline"](),
+        )
+
+
+@pytest.mark.tier1
+def test_run_round_requires_ef_state():
+    """An EF strategy handed to run_round without residual state is a hard
+    error — dropping the residuals would silently change the math."""
+    key = jax.random.PRNGKey(0)
+    specs = cf.param_specs(CFG)
+    params = cf.init(key, CFG)
+    storage = compress_params(params, specs, OMC)
+    with pytest.raises(ValueError, match="error.feedback|ef"):
+        simulate.run_round(
+            cf, CFG, specs, OMC, SIM, storage, DATA_FN, PLAN, 0, key,
+            strategy=ZOO["topk"](), ef=None,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Error-feedback state is checkpointable on the async runner
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.tier1
+def test_async_ef_checkpoint_roundtrip(tmp_path):
+    """Save mid-run with EF residuals, restore into a fresh runner, continue:
+    bit-identical to the uninterrupted run."""
+    def make_runner():
+        return async_engine.AsyncRunner(
+            cf, CFG, OMC, SIM, async_engine.AsyncConfig(buffer_goal=C),
+            traces.FixedTrace(latency=1.0), num_clients=C, data_fn=DATA_FN,
+            init_key=jax.random.PRNGKey(0), wire=True,
+            strategy=ZOO["topk"](),
+        )
+
+    ref = make_runner()
+    ref.run_until(flushes=1)
+    path = ckpt.save_async_state(str(tmp_path), ref)
+    ref.run_until(flushes=1)
+
+    res = make_runner()
+    ckpt.restore_async_state(path, res)
+    res.run_until(flushes=1)
+
+    assert_trees_bit_identical(ref.storage, res.storage)
+    assert set(ref.ef) == set(res.ef)
+    for k in ref.ef:
+        assert np.array_equal(np.asarray(ref.ef[k]), np.asarray(res.ef[k]))
+    assert ref.stats.snapshot() == res.stats.snapshot()
+
+    # a strategy-less runner must refuse an EF checkpoint (and vice versa)
+    plain = async_engine.AsyncRunner(
+        cf, CFG, OMC, SIM, async_engine.AsyncConfig(buffer_goal=C),
+        traces.FixedTrace(latency=1.0), num_clients=C, data_fn=DATA_FN,
+        init_key=jax.random.PRNGKey(0), wire=True,
+    )
+    with pytest.raises(ValueError, match="strategy"):
+        ckpt.restore_async_state(path, plain)
+
+
+# ---------------------------------------------------------------------------
+# Slow convergence gate: error feedback earns its residual memory
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_ef_topk_beats_plain_topk_convergence():
+    """At matched wire bytes (same density), EF top-k reaches a lower loss
+    than plain top-k — the residual memory recovers the discarded mass."""
+    rounds = 16
+    key = jax.random.PRNGKey(0)
+    plan = CohortPlan(num_clients=16, cohort_size=8)
+    spec = engine.CohortSpec(plan)
+
+    def run(error_feedback):
+        strategy = get_strategy("topk", density=0.05,
+                                error_feedback=error_feedback)
+        _, hist = engine.run_training_vectorized(
+            cf, CFG, OMC, SIM, spec, DATA_FN, key, num_rounds=rounds,
+            eval_every=100, strategy=strategy,
+        )
+        return float(np.mean([h["loss"] for h in hist[-4:]]))
+
+    loss_ef = run(True)
+    loss_plain = run(False)
+    assert loss_ef < loss_plain, (loss_ef, loss_plain)
