@@ -1,19 +1,53 @@
-"""Kernel micro-bench: ref-vs-interpret correctness timing + bytes math."""
+"""Kernel micro-bench: codec, bitpack, and fused-aggregate bytes + timing.
 
+Besides the original quant/dequant/dequant-matmul timings this now measures
+the two wire-path kernels of DESIGN.md §13:
+
+  * pack/unpack — exact-width bitstream, per zoo width (+ 2-bit ternary):
+    host-path latency, effective GB/s over the bytes the kernel actually
+    moves, and the ratio of moved bytes to the roofline minimum
+    (`roofline.analysis.packbits_bound_bytes`);
+  * fused aggregate — one compressed-domain server round at cohort 8:
+    latency vs the unfused oracle and moved-vs-bound byte ratio
+    (`fused_aggregate_bound_bytes`).
+
+Acceptance (asserted here, exercised by CI's bench-smoke job via
+``--smoke``): every measured/moved byte count stays within 2x of its
+roofline bound — tile padding and superblock rounding must never dominate
+the wire-path byte budget.
+"""
+
+import argparse
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.formats import FloatFormat
-from repro.kernels import ops, ref
+from repro.kernels import agg, bitpack, ops, ref
+from repro.roofline.analysis import (
+    fused_aggregate_bound_bytes,
+    packbits_bound_bytes,
+)
 
-from .common import print_table, save_result
+try:
+    from .common import print_table, save_result
+except ImportError:  # run as a script: python benchmarks/kernels_micro.py
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from common import print_table, save_result
+
+# (label, width): every zoo format width + the ternary 2-bit codes
+PACK_WIDTHS = [("ternary", 2), ("S1E2M3", 6), ("S1E3M7", 11),
+               ("S1E5M10", 16), ("S1E4M14", 19), ("S1E8M23", 32)]
+MAX_MOVED_OVER_BOUND = 2.0
 
 
 def _time(f, *args, n=5):
-    f(*args).block_until_ready() if hasattr(f(*args), "block_until_ready") \
-        else jax.block_until_ready(f(*args))
+    jax.block_until_ready(f(*args))
     t0 = time.time()
     for _ in range(n):
         out = f(*args)
@@ -21,7 +55,7 @@ def _time(f, *args, n=5):
     return (time.time() - t0) / n
 
 
-def run():
+def _codec_rows():
     rows = []
     for fmt_s in ("S1E3M7", "S1E4M14"):
         fmt = FloatFormat.parse(fmt_s)
@@ -38,5 +72,90 @@ def run():
                          host_gbps=round(gbps, 2)))
     print_table("Kernel micro-bench (host reference path)", rows,
                 ["fmt", "quant_ms", "dequant_ms", "dqmm_ms", "host_gbps"])
-    save_result("kernels_micro", rows)
     return rows
+
+
+def _pack_rows(n):
+    rows = []
+    for label, width in PACK_WIDTHS:
+        rng = np.random.default_rng(width)
+        codes = jnp.asarray(rng.integers(
+            0, (1 << width) - 1 if width < 32 else 0xFFFFFFFF, size=n,
+            endpoint=True, dtype=np.uint64).astype(np.uint32))
+        t_p = _time(lambda c: ops.pack_bits(c, width), codes)
+        words = ops.pack_bits(codes, width)
+        t_u = _time(lambda w: ops.unpack_bits(w, width, n), words)
+        moved = bitpack.pack_moved_bytes(n, width)
+        bound = packbits_bound_bytes(n, width)
+        ratio = moved / bound
+        assert ratio <= MAX_MOVED_OVER_BOUND, (
+            f"pack width={width}: moved {moved} B > {MAX_MOVED_OVER_BOUND}x "
+            f"roofline bound {bound} B")
+        rows.append(dict(fmt=label, width=width, n=n,
+                         pack_ms=round(t_p * 1e3, 2),
+                         unpack_ms=round(t_u * 1e3, 2),
+                         pack_gbps=round(moved / t_p / 1e9, 2),
+                         moved_bytes=moved, bound_bytes=bound,
+                         moved_over_bound=round(ratio, 3)))
+    print_table("Exact-width bitpack (bytes vs roofline bound)", rows,
+                ["fmt", "width", "n", "pack_ms", "unpack_ms", "pack_gbps",
+                 "moved_bytes", "bound_bytes", "moved_over_bound"])
+    return rows
+
+
+def _fused_rows(n, cohort=8):
+    rows = []
+    for fmt_s in ("S1E3M7", "S1E4M14"):
+        fmt = FloatFormat.parse(fmt_s)
+        keys = jax.random.split(jax.random.PRNGKey(3), 2)
+        srv = ref.ref_quantize(jax.random.normal(keys[0], (n,)), fmt)
+        cl = ref.ref_quantize(
+            jax.random.normal(keys[1], (cohort, n)) * 0.7, fmt)
+        s1 = jnp.ones((cohort,), jnp.float32)
+        b0 = jnp.zeros((cohort,), jnp.float32)
+        w = jnp.ones((cohort,), jnp.float32)
+        args = (srv, jnp.float32(1.0), jnp.float32(0.0), cl, s1, b0, w,
+                jnp.float32(0.5), fmt)
+        t_f = _time(lambda *a: ops.fused_aggregate(*a), *args)
+        t_r = _time(lambda *a: ref.ref_fused_aggregate(*a), *args)
+        moved = agg.fused_aggregate_moved_bytes(cohort, n, fmt)
+        bound = fused_aggregate_bound_bytes(cohort, n,
+                                            fmt.container_bytes_per_value)
+        ratio = moved / bound
+        assert ratio <= MAX_MOVED_OVER_BOUND, (
+            f"fused {fmt_s}: moved {moved} B > {MAX_MOVED_OVER_BOUND}x "
+            f"roofline bound {bound} B")
+        # the f32 traffic the unfused path would add on top of `bound`
+        unfused_extra = (cohort + 1) * n * 4
+        rows.append(dict(fmt=fmt_s, cohort=cohort, n=n,
+                         fused_ms=round(t_f * 1e3, 2),
+                         oracle_ms=round(t_r * 1e3, 2),
+                         fused_gbps=round(moved / t_f / 1e9, 2),
+                         moved_bytes=moved, bound_bytes=bound,
+                         moved_over_bound=round(ratio, 3),
+                         unfused_extra_f32_bytes=unfused_extra))
+    print_table("Fused compressed-domain aggregate (cohort round)", rows,
+                ["fmt", "cohort", "n", "fused_ms", "oracle_ms", "fused_gbps",
+                 "moved_bytes", "bound_bytes", "moved_over_bound",
+                 "unfused_extra_f32_bytes"])
+    return rows
+
+
+def run(smoke: bool = False):
+    n_pack = 1 << 16 if smoke else 1 << 20
+    n_fused = 1 << 14 if smoke else 1 << 18
+    payload = dict(codec=_codec_rows(), bitpack=_pack_rows(n_pack),
+                   fused_aggregate=_fused_rows(n_fused))
+    save_result("kernels_micro", payload)
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small sizes for CI (same assertions)")
+    run(smoke=ap.parse_args().smoke)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -174,6 +174,7 @@ def save_async_state(ckpt_dir: str, runner, keep: int = 3) -> str:
         trained_losses={f"{v}|{c}": float(l)
                         for (v, c), (_, l) in runner.trained.items()},
         has_ef=getattr(runner, "ef", None) is not None,
+        fused_agg=bool(getattr(runner, "fused_agg", False)),
         history=runner.history,
         stats=(
             dict(snapshot=runner.stats.snapshot(),
@@ -198,12 +199,22 @@ def restore_async_state(path: str, runner) -> Dict[str, Any]:
         extra = json.load(f)["extra"]
     if extra.get("kind") != "async_runner":
         raise ValueError(f"not an async-runner checkpoint: {path}")
-    f32_t = _decompressed_template(runner.storage)
+    fused = bool(extra.get("fused_agg"))
+    if fused != bool(getattr(runner, "fused_agg", False)):
+        raise ValueError(
+            "fused_agg mismatch: checkpoint was written with "
+            f"fused_agg={fused} but the runner has "
+            f"fused_agg={bool(getattr(runner, 'fused_agg', False))} — "
+            "construct the runner the same way (DESIGN.md §13)"
+        )
+    # fused buffers/trained caches hold transport-encoded uploads, whose
+    # tree structure matches the storage tree; unfused ones are f32 trees
+    entry_t = runner.storage if fused else _decompressed_template(runner.storage)
     template = dict(
         storage=runner.storage,
-        buffer=[f32_t] * len(extra["buffer_meta"]),
+        buffer=[entry_t] * len(extra["buffer_meta"]),
         versions={str(v): runner.storage for v in extra["version_keys"]},
-        trained={k: f32_t for k in sorted(extra["trained_losses"])},
+        trained={k: entry_t for k in sorted(extra["trained_losses"])},
     )
     has_ef = bool(extra.get("has_ef"))
     if has_ef != (runner.ef is not None):

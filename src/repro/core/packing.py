@@ -3,11 +3,18 @@
 The container dtype used by the codec (uint8/16/32) wastes padding bits for
 odd widths like 11 (S1E3M7) or 19 (S1E4M14).  On the wire — the federated
 server<->client transport — OMC sends the exact ``ceil(n * bits / 32)`` words.
-This module implements the pack/unpack pair as vectorized JAX ops.
 
-Packing trick: each w-bit field (w <= 32) spans at most two consecutive words.
-Contributions from different fields to the same word occupy *disjoint* bits,
-so a scatter-ADD of the low/high word parts is equivalent to a scatter-OR.
+The public :func:`pack` / :func:`unpack` dispatch through
+``repro.kernels.ops`` — compiled Pallas superblock kernels on TPU
+(``kernels/bitpack.py``), the pure-jnp bodies below elsewhere.  Both emit the
+same canonical bitstream (little-endian bit order within uint32 words, zero
+tail padding), so the two paths are bit-identical — property-tested in
+tests/test_bitpack.py.  Bit-layout contract: DESIGN.md §13.
+
+Packing trick (jnp oracle): each w-bit field (w <= 32) spans at most two
+consecutive words.  Contributions from different fields to the same word
+occupy *disjoint* bits, so a scatter-ADD of the low/high word parts is
+equivalent to a scatter-OR.
 """
 
 from __future__ import annotations
@@ -23,10 +30,14 @@ def packed_words(n: int, width: int) -> int:
     return -(-n * width // 32)
 
 
-def pack(codes: jax.Array, width: int) -> jax.Array:
-    """Pack ``codes`` (any uint dtype, values < 2**width) into uint32 words."""
+def _check_width(width: int) -> None:
     if not (1 <= width <= 32):
         raise ValueError(f"width must be in [1, 32], got {width}")
+
+
+def _pack_jnp(codes: jax.Array, width: int) -> jax.Array:
+    """jnp oracle for :func:`pack` (the CPU path of ``kernels.ops.pack_bits``)."""
+    _check_width(width)
     flat = codes.reshape(-1).astype(jnp.uint32)
     n = flat.shape[0]
     nwords = packed_words(n, width)
@@ -42,10 +53,9 @@ def pack(codes: jax.Array, width: int) -> jax.Array:
     return out[:nwords]
 
 
-def unpack(words: jax.Array, width: int, n: int) -> jax.Array:
-    """Inverse of :func:`pack`: recover ``n`` codes of ``width`` bits."""
-    if not (1 <= width <= 32):
-        raise ValueError(f"width must be in [1, 32], got {width}")
+def _unpack_jnp(words: jax.Array, width: int, n: int) -> jax.Array:
+    """jnp oracle for :func:`unpack`."""
+    _check_width(width)
     w = jnp.concatenate([words.astype(jnp.uint32), jnp.zeros((1,), jnp.uint32)])
     offs = (jnp.arange(n, dtype=jnp.uint32) * np.uint32(width))
     word = (offs >> 5).astype(jnp.int32)
@@ -54,6 +64,26 @@ def unpack(words: jax.Array, width: int, n: int) -> jax.Array:
     hi = (w[word + 1] << (np.uint32(31) - sh)) << np.uint32(1)
     mask = np.uint32((1 << width) - 1) if width < 32 else np.uint32(0xFFFFFFFF)
     return (lo | hi) & mask
+
+
+def pack(codes: jax.Array, width: int) -> jax.Array:
+    """Pack ``codes`` (any uint dtype, values < 2**width) into uint32 words.
+
+    Dispatches via ``kernels.ops.pack_bits``: Pallas on TPU, the jnp oracle
+    elsewhere — bit-identical either way.
+    """
+    _check_width(width)
+    from repro.kernels import ops  # deferred: kernels imports this module
+
+    return ops.pack_bits(codes, width)
+
+
+def unpack(words: jax.Array, width: int, n: int) -> jax.Array:
+    """Inverse of :func:`pack`: recover ``n`` codes of ``width`` bits."""
+    _check_width(width)
+    from repro.kernels import ops  # deferred: kernels imports this module
+
+    return ops.unpack_bits(words, width, int(n))
 
 
 def packed_bytes(n: int, fmt: FloatFormat) -> int:

@@ -30,6 +30,12 @@ client, and the runtime reproduces the sync engine's server tree within
 the documented one-quantization-step tolerance, with wire bytes
 reconciling byte-exactly.
 
+With ``fused_agg=True`` the buffer stores transport-encoded uploads
+(CompressedVariable leaves — ~11/32 the resident bytes at S1E3M7) and the
+flush aggregates selected variables in the compressed domain through the
+fused Pallas kernel (``repro.kernels.agg`` via ``kernels.ops``) — contract
+and gating rules in DESIGN.md §13.
+
 Checkpoint/resume of the full runtime state (buffer, version storages,
 pending tickets, trace counters) lives in
 :func:`repro.checkpoint.save_async_state` /
@@ -47,13 +53,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.omc import OMCConfig
-from repro.core.store import decompress_tree
+from repro.core.store import CompressedVariable, decompress_tree, is_compressed
+from repro.kernels import ops as kernel_ops
+from repro.models.common import ParamSpec
 
 from . import accounting
 from . import cohort as cohort_lib
 from . import simulate
 from .simulate import SimConfig
-from .state import compress_params
+from .state import compress_params, n_stack_axes
 from .traces import ClientTrace, FixedTrace
 
 _PRIO_UPLOAD = 0  # at equal times, uploads (and their flush) land first
@@ -238,6 +246,41 @@ def make_flush_fn(specs, omc: OMCConfig, sim: SimConfig, buffer_goal: int):
     return flush_fn
 
 
+def make_fused_flush_fn(specs, omc: OMCConfig, sim: SimConfig,
+                        buffer_goal: int):
+    """Compressed-domain flush (DESIGN.md §13): jitted
+    ``(storage, stacked compressed entries[K, ...], weights[K]) -> storage``.
+
+    Buffer entries arrive already transport-encoded (``fused_agg=True``
+    stores codes, not f32 trees — an S1E3M7 buffer holds ~11/32 the bytes);
+    selected variables aggregate through the fused dequant→weighted-mean→
+    requant kernel without materializing an f32 buffer stack, unselected
+    leaves take the classic weighted mean + interpolation.
+    """
+    del buffer_goal  # shape is carried by the traced arguments
+
+    @jax.jit
+    def flush_fn(storage, stacked, weights):
+        def f(path, spec_t, srv, stk):
+            if is_compressed(srv):
+                ba = n_stack_axes(spec_t, srv.codes)
+                new_codes, s, b = kernel_ops.fused_aggregate(
+                    srv.codes, srv.s, srv.b, stk.codes, stk.s, stk.b,
+                    weights, sim.server_lr, srv.fmt,
+                    batch_axes=ba, pvt=omc.pvt,
+                )
+                return CompressedVariable(new_codes, s, b, srv.fmt)
+            mean = cohort_lib.aggregate_weighted(stk, weights)
+            return srv + sim.server_lr * (mean - srv)
+
+        return jax.tree_util.tree_map_with_path(
+            f, specs, storage, stacked,
+            is_leaf=lambda s: isinstance(s, ParamSpec),
+        )
+
+    return flush_fn
+
+
 # ---------------------------------------------------------------------------
 # The runtime
 # ---------------------------------------------------------------------------
@@ -261,7 +304,9 @@ class _Pending:
 class _BufferEntry:
     client_id: int
     base_version: int
-    model: Any  # trained client model (f32 tree)
+    # trained client model: f32 tree, or — with fused_agg — the transport-
+    # encoded upload (CompressedVariable leaves at selected vars, §13)
+    model: Any
     loss: float
 
 
@@ -293,9 +338,15 @@ class AsyncRunner:
         wire: bool = True,
         strategy=None,
         ste: bool = False,
+        fused_agg: bool = False,
     ):
         if init_key is None and init_params is None:
             raise ValueError("need init_key or init_params")
+        if fused_agg and (strategy is not None or not omc.enabled):
+            raise ValueError(
+                "fused_agg=True needs OMC enabled and no zoo strategy "
+                "(DESIGN.md §13)"
+            )
         cohort_lib.validate_report_goal(acfg.buffer_goal, num_clients,
                                         what="buffer_goal")
         self.family, self.cfg, self.omc, self.sim = family, cfg, omc, sim
@@ -322,7 +373,18 @@ class AsyncRunner:
             family, cfg, self.specs, omc, sim, data_fn, acfg.capacity,
             strategy=strategy, ste=ste, takes_residual=takes_ef,
         )
-        self._flush_fn = make_flush_fn(self.specs, omc, sim, acfg.buffer_goal)
+        # fused mode (§13): buffer entries live transport-encoded and the
+        # flush aggregates in the compressed domain
+        self.fused_agg = bool(fused_agg)
+        if self.fused_agg:
+            self._encode_fn = jax.jit(jax.vmap(
+                lambda m: compress_params(m, self.specs, omc, fast=True)
+            ))
+            self._flush_fn = make_fused_flush_fn(self.specs, omc, sim,
+                                                 acfg.buffer_goal)
+        else:
+            self._flush_fn = make_flush_fn(self.specs, omc, sim,
+                                           acfg.buffer_goal)
         self.stats = (
             accounting.AsyncWireStats(
                 accounting.build_wire_table(params, self.specs, omc),
@@ -477,6 +539,10 @@ class AsyncRunner:
                         )
                 else:
                     models, losses = self._batch_fn(storage, cids, rnds)
+                if self.fused_agg:
+                    # transport-encode every lane (§13): the cached upload —
+                    # and later the buffer — holds codes, not f32 trees
+                    models = self._encode_fn(models)
                 for j, (c, _) in enumerate(chunk):
                     m = jax.tree_util.tree_map(lambda x: x[j], models)
                     self.trained[(base, c)] = (m, float(losses[j]))
@@ -552,7 +618,7 @@ def run_async_training(
     trace: ClientTrace, data_fn, init_key, *, num_clients: int,
     flushes: int, wire: bool = True,
     log: Optional[Callable[[str], None]] = None,
-    strategy=None, ste: bool = False,
+    strategy=None, ste: bool = False, fused_agg: bool = False,
 ) -> Tuple[Any, List[Dict[str, Any]], AsyncRunner]:
     """Async mirror of :func:`repro.federated.engine.run_training_vectorized`.
 
@@ -566,7 +632,7 @@ def run_async_training(
     runner = AsyncRunner(
         family, cfg, omc, sim, acfg, trace, num_clients=num_clients,
         data_fn=data_fn, init_key=init_key, wire=wire,
-        strategy=strategy, ste=ste,
+        strategy=strategy, ste=ste, fused_agg=fused_agg,
     )
     for i in range(flushes):
         runner.run_until(flushes=1)

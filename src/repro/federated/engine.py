@@ -28,6 +28,12 @@ by batched-op reassociation (documented tolerance), and wire-byte
 accounting matches the loop path bit-for-bit.  See DESIGN.md §9 for the
 layout and the loop-vs-vectorized decision guide.
 
+With ``fused_agg=True`` the server half of the round runs in the compressed
+domain: client uploads are transport-encoded and aggregated by the fused
+Pallas dequant→masked-weighted-accumulate→requant kernel without ever
+materializing f32 cohort state for selected variables — contract and gating
+rules in DESIGN.md §13.
+
 Every round here is still a hard barrier — the program returns when the
 whole cohort has trained.  When the fleet is straggler-dominated (heavy-tail
 latency, diurnal availability), use the event-driven non-barrier runtime
@@ -44,11 +50,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.formats import FloatFormat
+from repro.core.formats import FloatFormat, value_quantize, encode
 from repro.core.omc import OMCConfig
 from repro.core.partial import ppq_mask
 from repro.core.policy import path_str
-from repro.core.store import compress_variable, decompress_tree
+from repro.core.pvt import pvt_solve_fast
+from repro.core.store import CompressedVariable, compress_variable, \
+    decompress_tree, is_compressed
+from repro.kernels import ops as kernel_ops
 from repro.models.common import ParamSpec
 
 from . import accounting
@@ -205,6 +214,41 @@ def sample_tiered_cohort(
 
 
 # ---------------------------------------------------------------------------
+# Compressed-domain (fused) aggregation — DESIGN.md §13
+# ---------------------------------------------------------------------------
+
+
+def fused_aggregation_supported(spec: "CohortSpec", omc: OMCConfig,
+                                strategy=None) -> bool:
+    """When the fused compressed-domain server path can be picked (§13).
+
+    Requires a homogeneous cohort (mixed tiers stack containers of different
+    dtypes), OMC enabled, and no zoo strategy (strategies define their own
+    decode/aggregate algebra, incl. error feedback).
+    """
+    return omc.enabled and not spec.is_hetero and strategy is None
+
+
+def transport_encode_stacked(stacked_leaf, fmt: FloatFormat, pvt: bool,
+                             batch_axes: int):
+    """Encode a [C, ...] stack of client uploads to transport form.
+
+    The wire-path math of ``compress_variable(..., fast=True)`` per client
+    row, batched: (codes, s, b) with the client axis leading.  Dead-client
+    rows may hold garbage — they encode to garbage codes/scalars, and the
+    fused kernel's ``where(w > 0, ·, 0)`` guard discards them exactly.
+    """
+    vq = value_quantize(stacked_leaf, fmt)
+    if pvt:
+        s, b = pvt_solve_fast(stacked_leaf, vq, batch_axes + 1)
+    else:
+        c = stacked_leaf.shape[0]
+        s = jnp.ones((c,), jnp.float32)
+        b = jnp.zeros((c,), jnp.float32)
+    return encode(vq, fmt, quantize=False), s, b
+
+
+# ---------------------------------------------------------------------------
 # The compiled round: data gen + vmapped clients + aggregation + re-compress,
 # all tiers, one XLA program.
 # ---------------------------------------------------------------------------
@@ -265,6 +309,7 @@ def make_round_fn(
     data_mode: str = "vmap",
     strategy=None,
     ste: bool = False,
+    fused_agg: bool = False,
 ):
     """Build the engine's compiled round.
 
@@ -291,9 +336,23 @@ def make_round_fn(
     residual state ``ef`` as a final argument and returns the updated
     state as a fourth output — gather, per-client update, and the
     alive-masked scatter all stay inside the one compiled program.
+
+    ``fused_agg=True`` aggregates selected variables entirely in the
+    compressed domain (DESIGN.md §13): client uploads are transport-encoded
+    and the server round runs the fused dequant→masked-weighted-accumulate→
+    requant kernel (``repro.kernels.agg`` via ``kernels.ops``) — the server
+    never materializes f32 cohort state for those variables.  Requires
+    :func:`fused_aggregation_supported`; results match the unfused path
+    within one quantization step with byte-identical wire ledgers
+    (gated in tests/test_engine.py).
     """
     if data_mode not in ("vmap", "host"):
         raise ValueError(f"data_mode must be 'vmap' or 'host', got {data_mode!r}")
+    if fused_agg and not fused_aggregation_supported(spec, omc, strategy):
+        raise ValueError(
+            "fused_agg=True needs a homogeneous cohort, OMC enabled, and no "
+            "zoo strategy (DESIGN.md §13)"
+        )
     takes_ef = simulate.ef_lib.takes_residual(omc, strategy)
     ones = [
         simulate.make_client_fn(family, cfg, specs, omc_t, sim,
@@ -328,6 +387,39 @@ def make_round_fn(
         loss = (loss_c * w).sum() / jnp.maximum(n_alive, 1.0)
         return new_storage, loss, n_alive
 
+    def finish_fused(storage, stacked, loss_c, alive):
+        # Compressed-domain server round (§13): selected variables never
+        # exist as an f32 cohort stack on the server — each client row is
+        # transport-encoded and the fused kernel aggregates codes directly.
+        w = alive.astype(jnp.float32)
+        loss_c = jnp.where(alive, loss_c, 0.0)
+        n_alive = w.sum()
+        loss = (loss_c * w).sum() / jnp.maximum(n_alive, 1.0)
+
+        def f(path, spec_t, srv, stack):
+            if is_compressed(srv):
+                ba = n_stack_axes(spec_t, srv.codes)
+                codes_c, s_c, b_c = transport_encode_stacked(
+                    stack, srv.fmt, omc.pvt, ba
+                )
+                new_codes, s, b = kernel_ops.fused_aggregate(
+                    srv.codes, srv.s, srv.b, codes_c, s_c, b_c, w,
+                    sim.server_lr, srv.fmt, batch_axes=ba, pvt=omc.pvt,
+                )
+                return CompressedVariable(new_codes, s, b, srv.fmt)
+            # Unselected leaves keep the classic f32 mean + interpolation.
+            x = jnp.where(
+                alive.reshape((-1,) + (1,) * (stack.ndim - 1)), stack, 0.0
+            )
+            mean = cohort_lib.aggregate_weighted(x, w)
+            return srv + sim.server_lr * (mean - srv)
+
+        new_storage = jax.tree_util.tree_map_with_path(
+            f, specs, storage, stacked,
+            is_leaf=lambda s: isinstance(s, ParamSpec),
+        )
+        return new_storage, loss, n_alive
+
     def body(storage, ids_per_tier, batches_per_tier, alive, round_index, ef):
         server_f32 = decompress_tree(storage)
         models, losses, rows = [], [], []
@@ -353,7 +445,11 @@ def make_round_fn(
         stacked = jax.tree_util.tree_map(
             lambda *xs: jnp.concatenate(xs, 0), *models
         )
-        out = finish(server_f32, stacked, jnp.concatenate(losses), alive)
+        if fused_agg:
+            out = finish_fused(storage, stacked, jnp.concatenate(losses),
+                               alive)
+        else:
+            out = finish(server_f32, stacked, jnp.concatenate(losses), alive)
         if not takes_ef:
             return out
         # scatter the cohort's updated residual rows back into the
@@ -441,6 +537,7 @@ def run_round_vectorized(
     strategy=None,
     ste: bool = False,
     ef=None,
+    fused_agg: bool = False,
 ) -> Tuple[Any, Dict[str, float]]:
     """One vectorized round.  Returns (new server storage, metrics).
 
@@ -455,7 +552,8 @@ def run_round_vectorized(
     takes_ef = simulate.ef_lib.takes_residual(omc, strategy)
     if round_fn is None:
         round_fn = make_round_fn(family, cfg, specs, omc, sim, spec, data_fn,
-                                 data_mode, strategy=strategy, ste=ste)
+                                 data_mode, strategy=strategy, ste=ste,
+                                 fused_agg=fused_agg)
     if takes_ef and ef is None:
         raise ValueError(
             f"strategy {strategy.label!r} uses error feedback: pass the "
@@ -543,6 +641,7 @@ def run_training_vectorized(
     strategy=None,
     ste: bool = False,
     ef=None,
+    fused_agg: bool = False,
 ):
     """Vectorized mirror of :func:`repro.federated.simulate.run_training`.
 
@@ -558,7 +657,8 @@ def run_training_vectorized(
     params = family.init(init_key, cfg) if init_params is None else init_params
     storage = compress_params(params, specs, omc) if omc.enabled else params
     round_fn = make_round_fn(family, cfg, specs, omc, sim, spec, data_fn,
-                             data_mode, strategy=strategy, ste=ste)
+                             data_mode, strategy=strategy, ste=ste,
+                             fused_agg=fused_agg)
     if ef is None and simulate.ef_lib.takes_residual(omc, strategy):
         ef = simulate.ef_lib.init_ef_state(params, specs, omc,
                                            spec.plan.num_clients)

@@ -1,8 +1,10 @@
 """Pallas TPU kernels for OMC hot spots (validated via interpret mode).
 
 quantize / dequantize / quantize_stats: HBM-bandwidth elementwise codecs;
-dequant_matmul: serving matmul that decompresses weight tiles in VMEM.
+dequant_matmul: serving matmul that decompresses weight tiles in VMEM;
+bitpack: exact-width wire bitstream pack/unpack (superblock layout);
+agg: fused compressed-domain cohort aggregation (DESIGN.md §13).
 ``ops`` holds the jit'd dispatching wrappers; ``ref`` the pure-jnp oracles.
 """
 
-from . import ops, ref
+from . import agg, bitpack, ops, ref

@@ -1,0 +1,151 @@
+"""Pallas TPU kernels: exact-width bitstream pack/unpack on-device.
+
+``core.packing`` implements the wire bitstream with a scatter-add (pack) and
+a dynamic gather (unpack) — fine as a jnp oracle, but scatters serialize on
+TPU and the gather defeats fusion.  These kernels reformulate both directions
+as fully *static* dataflow so the whole pack/unpack runs as vectorized VPU
+work at HBM bandwidth:
+
+  Superblock layout.  For a w-bit field width let L = lcm(32, w).  A block of
+  ``P_f = L // w`` consecutive fields occupies exactly ``P_w = L // 32``
+  consecutive uint32 words, and *no field crosses a block boundary*.  Within
+  a block the field -> (word, shift) mapping is a compile-time constant, so
+  both directions unroll into static column slices + scalar shifts:
+
+  * pack:   word j ORs together the in-word contributions of the (statically
+    known) fields that land in it — the same ``(f << sh)`` / ``(f >> (31-sh))
+    >> 1`` low/high split as ``core.packing.pack``.  Contributed bits are
+    disjoint, so the combine is a plain OR — no scatter.
+  * unpack: field i reads its containing word and that word's successor
+    (clamped to the block edge; the clamp is harmless because a non-crossing
+    field's high part is zeroed by the final ``& (2**w - 1)`` mask, mirroring
+    the oracle's appended zero word).
+
+Bit-identity with ``core.packing`` is exact by construction: the packed
+stream is *canonical* — unique given the field values and zero tail padding —
+and both implementations emit it.  Property-tested over every format in the
+zoo (and 2-bit ternary) in tests/test_bitpack.py, interpret mode on CPU.
+
+Contract details (bit layout, tail semantics): DESIGN.md §13.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.packing import packed_words
+
+_M32 = np.uint32(0xFFFFFFFF)
+# Target lane count per grid step; rounded so blocks stay row-aligned.
+_TARGET_LANES = 2048
+
+
+@functools.lru_cache(maxsize=None)
+def _geometry(width: int) -> Tuple[int, int, int]:
+    """(fields_per_block, words_per_block, block_rows_per_grid_step)."""
+    lcm = (32 * width) // math.gcd(32, width)
+    p_f = lcm // width
+    p_w = lcm // 32
+    rows = max(_TARGET_LANES // p_f, 1)
+    rows = -(-rows // 8) * 8  # sublane-aligned
+    return p_f, p_w, rows
+
+
+def _pack_kernel(f_ref, o_ref, *, width: int):
+    p_f, p_w, _ = _geometry(width)
+    f = f_ref[...]  # (R, P_f) uint32
+    cols = []
+    for j in range(p_w):
+        acc = None
+        for i in range(p_f):
+            word, sh = (i * width) // 32, (i * width) % 32
+            c = f[:, i : i + 1]
+            if word == j:
+                term = (c << np.uint32(sh)) & _M32
+            elif word + 1 == j and sh + width > 32:  # field crosses into j
+                # field >> (32-sh) is UB at sh == 0; the two-step shift is safe
+                term = (c >> np.uint32(31 - sh)) >> np.uint32(1)
+            else:
+                continue
+            acc = term if acc is None else (acc | term)
+        cols.append(acc)
+    o_ref[...] = jnp.concatenate(cols, axis=1)
+
+
+def _unpack_kernel(w_ref, o_ref, *, width: int):
+    p_f, p_w, _ = _geometry(width)
+    mask = np.uint32((1 << width) - 1) if width < 32 else _M32
+    w = w_ref[...]  # (R, P_w) uint32
+    cols = []
+    for i in range(p_f):
+        word, sh = (i * width) // 32, (i * width) % 32
+        lo = w[:, word : word + 1] >> np.uint32(sh)
+        nxt = min(word + 1, p_w - 1)  # edge clamp; high bits masked off below
+        hi = (w[:, nxt : nxt + 1] << np.uint32(31 - sh)) << np.uint32(1)
+        cols.append((lo | hi) & mask)
+    o_ref[...] = jnp.concatenate(cols, axis=1)
+
+
+def pack(codes: jax.Array, width: int, *, interpret: bool = False) -> jax.Array:
+    """Pack ``codes`` (values < 2**width) into the exact uint32 bitstream.
+
+    Bit-identical to ``core.packing.pack`` (the canonical layout).
+    """
+    if not (1 <= width <= 32):
+        raise ValueError(f"width must be in [1, 32], got {width}")
+    p_f, p_w, rows = _geometry(width)
+    flat = codes.reshape(-1).astype(jnp.uint32)
+    n = flat.shape[0]
+    nblocks = -(-max(n, 1) // p_f)
+    nblocks = -(-nblocks // rows) * rows
+    flat = jnp.pad(flat, (0, nblocks * p_f - n))
+    out = pl.pallas_call(
+        functools.partial(_pack_kernel, width=width),
+        grid=(nblocks // rows,),
+        in_specs=[pl.BlockSpec((rows, p_f), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rows, p_w), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblocks, p_w), jnp.uint32),
+        interpret=interpret,
+    )(flat.reshape(nblocks, p_f))
+    return out.reshape(-1)[: packed_words(n, width)]
+
+
+def unpack(words: jax.Array, width: int, n: int, *, interpret: bool = False) -> jax.Array:
+    """Inverse of :func:`pack`: recover ``n`` codes of ``width`` bits (uint32)."""
+    if not (1 <= width <= 32):
+        raise ValueError(f"width must be in [1, 32], got {width}")
+    p_f, p_w, rows = _geometry(width)
+    flat = words.reshape(-1).astype(jnp.uint32)
+    nblocks = -(-max(n, 1) // p_f)
+    nblocks = -(-nblocks // rows) * rows
+    # Zero tail padding == the oracle's appended zero word.
+    flat = jnp.pad(flat, (0, nblocks * p_w - flat.shape[0]))
+    out = pl.pallas_call(
+        functools.partial(_unpack_kernel, width=width),
+        grid=(nblocks // rows,),
+        in_specs=[pl.BlockSpec((rows, p_w), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((rows, p_f), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nblocks, p_f), jnp.uint32),
+        interpret=interpret,
+    )(flat.reshape(nblocks, p_w))
+    return out.reshape(-1)[:n]
+
+
+def pack_moved_bytes(n: int, width: int) -> int:
+    """HBM bytes the pack kernel actually moves (padded operands + result)."""
+    p_f, p_w, rows = _geometry(width)
+    nblocks = -(-max(n, 1) // p_f)
+    nblocks = -(-nblocks // rows) * rows
+    return 4 * nblocks * p_f + 4 * nblocks * p_w
+
+
+def unpack_moved_bytes(n: int, width: int) -> int:
+    """HBM bytes the unpack kernel actually moves (padded operands + result)."""
+    return pack_moved_bytes(n, width)

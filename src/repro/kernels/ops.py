@@ -1,10 +1,16 @@
 """jit'd public wrappers for the Pallas kernels.
 
-Dispatch policy:
+Dispatch policy (DESIGN.md §13):
   * on TPU: compiled Pallas kernels,
   * elsewhere: pure-jnp reference (``ref.py``) by default — fast on CPU —
     or interpret-mode Pallas when ``force_interpret=True`` (used by the
     correctness tests, which execute the actual kernel bodies).
+
+The platform probe runs ONCE at import and is memoized in ``_ON_TPU``.
+It used to be a per-call function that swallowed every exception — inside a
+jit trace a probe failure silently returned False and could flip dispatch
+between retraces; now the decision is a module constant (regression-tested
+in tests/test_kernels.py::test_cpu_dispatch_hits_ref).
 """
 
 from __future__ import annotations
@@ -17,21 +23,26 @@ import jax.numpy as jnp
 
 from repro.core.formats import FloatFormat
 
+from . import agg as _agg
+from . import bitpack as _bp
 from . import dequant_matmul as _dm
 from . import quantize as _q
 from . import ref
 
 
-def _on_tpu() -> bool:
+def _probe_tpu() -> bool:
     try:
         return jax.devices()[0].platform == "tpu"
     except Exception:
         return False
 
 
+_ON_TPU: bool = _probe_tpu()
+
+
 @functools.partial(jax.jit, static_argnames=("fmt", "force_interpret"))
 def quantize(x, fmt: FloatFormat, force_interpret: bool = False):
-    if _on_tpu():
+    if _ON_TPU:
         return _q.quantize(x, fmt)
     if force_interpret:
         return _q.quantize(x, fmt, interpret=True)
@@ -41,7 +52,7 @@ def quantize(x, fmt: FloatFormat, force_interpret: bool = False):
 @functools.partial(jax.jit, static_argnames=("fmt", "force_interpret"))
 def dequantize(codes, fmt: FloatFormat, s=None, b=None,
                force_interpret: bool = False):
-    if _on_tpu():
+    if _ON_TPU:
         return _q.dequantize(codes, fmt, s, b)
     if force_interpret:
         return _q.dequantize(codes, fmt, s, b, interpret=True)
@@ -50,7 +61,7 @@ def dequantize(codes, fmt: FloatFormat, s=None, b=None,
 
 @functools.partial(jax.jit, static_argnames=("fmt", "force_interpret"))
 def quantize_stats(x, fmt: FloatFormat, force_interpret: bool = False):
-    if _on_tpu():
+    if _ON_TPU:
         return _q.quantize_stats(x, fmt)
     if force_interpret:
         return _q.quantize_stats(x, fmt, interpret=True)
@@ -62,7 +73,7 @@ def quantize_stats(x, fmt: FloatFormat, force_interpret: bool = False):
 def dequant_matmul(a, w_codes, fmt: FloatFormat, s=None, b=None,
                    bm: int = 256, bn: int = 256, bk: int = 256,
                    force_interpret: bool = False):
-    if _on_tpu():
+    if _ON_TPU:
         return _dm.dequant_matmul(a, w_codes, fmt, s, b, bm=bm, bn=bn, bk=bk)
     if force_interpret:
         return _dm.dequant_matmul(a, w_codes, fmt, s, b, bm=bm, bn=bn, bk=bk,
@@ -72,3 +83,52 @@ def dequant_matmul(a, w_codes, fmt: FloatFormat, s=None, b=None,
         jnp.float32(1.0) if s is None else s,
         jnp.float32(0.0) if b is None else b,
     )
+
+
+@functools.partial(jax.jit, static_argnames=("width", "force_interpret"))
+def pack_bits(codes, width: int, force_interpret: bool = False):
+    """codes (values < 2**width) -> exact uint32 bitstream (wire form)."""
+    if _ON_TPU:
+        return _bp.pack(codes, width)
+    if force_interpret:
+        return _bp.pack(codes, width, interpret=True)
+    return ref.ref_pack(codes, width)
+
+
+@functools.partial(jax.jit, static_argnames=("width", "n", "force_interpret"))
+def unpack_bits(words, width: int, n: int, force_interpret: bool = False):
+    """Inverse of :func:`pack_bits`: recover ``n`` codes (uint32)."""
+    if _ON_TPU:
+        return _bp.unpack(words, width, n)
+    if force_interpret:
+        return _bp.unpack(words, width, n, interpret=True)
+    return ref.ref_unpack(words, width, n)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("fmt", "batch_axes", "pvt", "force_interpret")
+)
+def fused_aggregate(srv_codes, srv_s, srv_b, cl_codes, cl_s, cl_b, weights,
+                    lr, fmt: FloatFormat, batch_axes: int = 0,
+                    pvt: bool = True, force_interpret: bool = False):
+    """Compressed-domain server round for one variable (DESIGN.md §13).
+
+    Returns (new_codes, s, b) — the aggregated server variable in storage
+    form, without materializing f32 cohort state on the Pallas path.
+    """
+    if _ON_TPU:
+        out = _agg.fused_aggregate(srv_codes, srv_s, srv_b, cl_codes, cl_s,
+                                   cl_b, weights, lr, fmt,
+                                   batch_axes=batch_axes)
+    elif force_interpret:
+        out = _agg.fused_aggregate(srv_codes, srv_s, srv_b, cl_codes, cl_s,
+                                   cl_b, weights, lr, fmt,
+                                   batch_axes=batch_axes, interpret=True)
+    else:
+        out = ref.ref_fused_aggregate(srv_codes, srv_s, srv_b, cl_codes, cl_s,
+                                      cl_b, weights, lr, fmt,
+                                      batch_axes=batch_axes)
+    if not pvt:
+        codes, _, _ = out
+        return codes, jnp.float32(1.0), jnp.float32(0.0)
+    return out

@@ -10,8 +10,10 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+import numpy as np
+
 from repro.core.formats import FloatFormat, decode, encode, value_quantize
-from repro.core.pvt import pvt_apply
+from repro.core.pvt import pvt_apply, pvt_solve_fast
 
 
 def ref_quantize(x: jax.Array, fmt: FloatFormat) -> jax.Array:
@@ -54,3 +56,61 @@ def ref_quantize_stats(x: jax.Array, fmt: FloatFormat):
     q = vq.astype(jnp.float32).reshape(-1)
     sums = jnp.stack([v.sum(), q.sum(), (v * q).sum(), (q * q).sum()])
     return codes, sums
+
+
+def ref_pack(codes: jax.Array, width: int) -> jax.Array:
+    """Canonical exact-width bitstream — delegates to ``core.packing.pack``."""
+    from repro.core import packing
+
+    return packing._pack_jnp(codes, width)
+
+
+def ref_unpack(words: jax.Array, width: int, n: int) -> jax.Array:
+    """Inverse of :func:`ref_pack` — delegates to ``core.packing.unpack``."""
+    from repro.core import packing
+
+    return packing._unpack_jnp(words, width, n)
+
+
+def ref_fused_aggregate(
+    srv_codes: jax.Array,
+    srv_s: jax.Array,
+    srv_b: jax.Array,
+    cl_codes: jax.Array,
+    cl_s: jax.Array,
+    cl_b: jax.Array,
+    weights: jax.Array,
+    lr,
+    fmt: FloatFormat,
+    *,
+    batch_axes: int = 0,
+):
+    """Unfused oracle for ``agg.fused_aggregate`` (see DESIGN.md §13).
+
+    Decode every client row (s_c·decode(codes_c) + b_c), zero dead rows,
+    weighted-mean, interpolate into the decoded server value, then
+    re-quantize and re-solve PVT exactly like
+    ``compress_variable(..., fast=True)``.  Element codes match the Pallas
+    kernel except for round-to-nearest-even boundary ties, where f32
+    reassociation may pick the adjacent code on a tiny fringe; (s, b) may
+    differ by f32 reduction-order noise only.
+    """
+    def bcast(v, ndim):
+        # pad trailing axes: per-client/per-entry scalars broadcast from the
+        # left (e.g. (C,) against (C,) + leaf shape)
+        v = jnp.asarray(v, jnp.float32)
+        return v.reshape(v.shape + (1,) * (ndim - v.ndim))
+
+    old = pvt_apply(decode(srv_codes, fmt), bcast(srv_s, srv_codes.ndim),
+                    bcast(srv_b, srv_codes.ndim))
+    x = pvt_apply(decode(cl_codes, fmt), bcast(cl_s, cl_codes.ndim),
+                  bcast(cl_b, cl_codes.ndim))
+    w = jnp.asarray(weights, jnp.float32)
+    wb = w.reshape((-1,) + (1,) * old.ndim)
+    x = jnp.where(wb > 0, x, 0.0)  # dead rows: where, so NaN cannot leak
+    acc = jnp.sum(x * wb, axis=0) / jnp.maximum(jnp.sum(w), 1e-9)
+    new = old + jnp.float32(lr) * (acc - old)
+    vq = value_quantize(new, fmt)
+    codes = encode(vq, fmt, quantize=False)
+    s, b = pvt_solve_fast(new, vq, batch_axes)
+    return codes, s, b

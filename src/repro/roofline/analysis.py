@@ -212,6 +212,38 @@ def analyze_compiled(
     return terms
 
 
+# ---------------------------------------------------------------------------
+# Minimal-HBM-byte bounds for the compressed-domain kernels (DESIGN.md §13).
+# `benchmarks/kernels_micro.py` compares each kernel's *actual* padded buffer
+# traffic (the `*_moved_bytes` helpers in repro.kernels) against these and
+# asserts the ratio stays <= 2x — the acceptance gate that tile padding and
+# superblock rounding never silently dominate the wire-path byte budget.
+# ---------------------------------------------------------------------------
+
+
+def packbits_bound_bytes(n: int, width: int) -> int:
+    """Minimal HBM bytes to (un)pack ``n`` ``width``-bit codes.
+
+    One read of the u32-lane code plane plus one write of the exact
+    ``ceil(n*width/32)``-word bitstream (or the reverse); no padding.
+    """
+    from repro.core.packing import packed_words
+
+    return 4 * n + 4 * packed_words(n, width)
+
+
+def fused_aggregate_bound_bytes(cohort: int, n: int,
+                                container_bytes: int) -> int:
+    """Minimal HBM bytes for one fused compressed-domain server round.
+
+    Reads the server plane and ``cohort`` client code planes once, writes the
+    new server plane once — ``(C + 2) * n`` container elements; the per-client
+    scalars are O(C) and ignored.  The unfused path moves ``(C + 1)`` extra
+    *f32* round trips of the variable on top of this.
+    """
+    return (cohort + 2) * n * container_bytes
+
+
 def model_flops(arch_mod, cfg, shape) -> float:
     """MODEL_FLOPS: 6·N·D for training, 2·N·D for inference (N = active)."""
     n = (cfg.active_param_count() if hasattr(cfg, "active_param_count")

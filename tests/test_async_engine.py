@@ -91,6 +91,60 @@ def test_async_matches_sync_engine_at_degenerate_trace():
         assert d.mean() <= 1e-4, d.mean()
 
 
+def test_async_fused_flush_matches_unfused():
+    """fused_agg=True: the buffer holds transport-encoded uploads and the
+    flush aggregates in the compressed domain (DESIGN.md §13).  Vs the
+    unfused runtime: byte-exact ledgers, and server trees within ~one
+    transport-quantization step *per flush* at each leaf's own scale (the
+    per-element metric is meaningless here — the re-solved PVT offset shifts
+    near-zero elements by many of their own tiny steps)."""
+    sim = dataclasses.replace(SIM, local_steps=1)
+    out = {}
+    for fused in (False, True):
+        out[fused] = async_engine.run_async_training(
+            cf, CFG, OMC, sim, async_engine.AsyncConfig(buffer_goal=8),
+            traces.FixedTrace(latency=1.0), DATA_FN, jax.random.PRNGKey(0),
+            num_clients=8, flushes=2, wire=True, fused_agg=fused,
+        )
+    (u_st, u_hist, u_run), (f_st, f_hist, f_run) = out[False], out[True]
+    for uh, fh in zip(u_hist, f_hist):
+        assert uh["buffer"] == fh["buffer"]
+        assert abs(uh["loss"] - fh["loss"]) < 1e-3
+    assert u_run.stats.down_bytes == f_run.stats.down_bytes
+    assert u_run.stats.up_bytes == f_run.stats.up_bytes
+    a, b = decompress_tree(u_st), decompress_tree(f_st)
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        x, y = np.asarray(x), np.asarray(y)
+        d = np.abs(x - y)
+        scale = max(np.abs(x).max(), np.abs(y).max(), 2.0 ** -6)
+        # one S1E3M7 mantissa step at the leaf's magnitude
+        step = 2.0 ** (np.floor(np.log2(scale)) - 7)
+        assert d.max() <= 4 * step, (d.max(), step)  # ~1 step/flush + margin
+        assert d.mean() <= step, (d.mean(), step)
+
+
+def test_async_fused_validation():
+    """Unsupported configs refuse loudly instead of silently falling back."""
+    from repro.compress import TopKSparseStrategy
+
+    with pytest.raises(ValueError):  # zoo strategy: incompatible wire form
+        async_engine.AsyncRunner(
+            cf, CFG, OMC, SIM, async_engine.AsyncConfig(buffer_goal=2),
+            traces.FixedTrace(), num_clients=4, data_fn=DATA_FN,
+            init_key=jax.random.PRNGKey(0), fused_agg=True,
+            strategy=TopKSparseStrategy(),
+        )
+    f32 = OMCConfig.parse("S1E8M23", quantize_fraction=1.0)
+    assert not f32.enabled
+    with pytest.raises(ValueError):  # OMC disabled: nothing to fuse
+        async_engine.AsyncRunner(
+            cf, CFG, f32, SIM, async_engine.AsyncConfig(buffer_goal=2),
+            traces.FixedTrace(), num_clients=4, data_fn=DATA_FN,
+            init_key=jax.random.PRNGKey(0), fused_agg=True,
+        )
+
+
 def test_async_accounting_reconciles_with_codec():
     """The ledger's totals are codec payload sizes, byte for byte."""
     _, hist, runner = _async_run(

@@ -1,0 +1,137 @@
+"""Pallas bitstream pack/unpack vs the canonical ``core.packing`` oracle.
+
+The contract under test (DESIGN.md §13): the packed wire bitstream is
+*canonical* — little-endian bit order within uint32 words, zero tail
+padding — so the Pallas superblock kernels (``kernels/bitpack.py``, run in
+interpret mode here) must be bit-identical to the jnp scatter/gather oracle
+for every width in the format zoo (6/11/16/19/32 bits) plus the 2-bit
+ternary codes, at every tail length.  Property-tested with hypothesis when
+available; a deterministic sweep keeps coverage without it.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_stub import given, settings, st
+from repro.core import packing
+from repro.core.formats import FloatFormat
+from repro.kernels import bitpack, ops, ref
+
+# Every zoo format width + the 2-bit ternary codes of repro.compress.ternary.
+ZOO_WIDTHS = sorted({FloatFormat(2, 3).bits, FloatFormat(3, 7).bits,
+                     FloatFormat(4, 14).bits, FloatFormat(5, 10).bits,
+                     FloatFormat(8, 23).bits} | {2})
+# Tail lengths that straddle word, block, and grid-row boundaries.
+LENGTHS = [1, 3, 31, 32, 33, 257, 1000, 2048, 5001]
+
+
+def _codes(n: int, width: int, seed: int = 0) -> jax.Array:
+    rng = np.random.default_rng(seed)
+    hi = (1 << width) - 1 if width < 32 else 0xFFFFFFFF
+    return jnp.asarray(rng.integers(0, hi, size=n, endpoint=True,
+                                    dtype=np.uint64).astype(np.uint32))
+
+
+@pytest.mark.parametrize("width", ZOO_WIDTHS)
+@pytest.mark.parametrize("n", LENGTHS)
+def test_pack_bit_identical_to_oracle(width, n):
+    codes = _codes(n, width, seed=n * 37 + width)
+    got = bitpack.pack(codes, width, interpret=True)
+    want = packing._pack_jnp(codes, width)
+    assert got.shape == (packing.packed_words(n, width),)
+    assert got.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("width", ZOO_WIDTHS)
+@pytest.mark.parametrize("n", LENGTHS)
+def test_unpack_bit_identical_and_roundtrip(width, n):
+    codes = _codes(n, width, seed=n * 13 + width)
+    words = packing._pack_jnp(codes, width)
+    got = bitpack.unpack(words, width, n, interpret=True)
+    want = packing._unpack_jnp(words, width, n)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # pack∘unpack is the identity on the code stream
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(codes))
+
+
+@given(st.integers(min_value=0, max_value=len(ZOO_WIDTHS) - 1),
+       st.integers(min_value=1, max_value=4096),
+       st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=40, deadline=None)
+def test_pack_roundtrip_property(width_idx, n, seed):
+    """∀ width ∈ zoo, ∀ tail length: Pallas pack == oracle pack (bit-exact)
+    and unpack(pack(x)) == x."""
+    width = ZOO_WIDTHS[width_idx]
+    codes = _codes(n, width, seed=seed)
+    packed = bitpack.pack(codes, width, interpret=True)
+    np.testing.assert_array_equal(np.asarray(packed),
+                                  np.asarray(packing._pack_jnp(codes, width)))
+    back = bitpack.unpack(packed, width, n, interpret=True)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(codes))
+
+
+def test_pack_accepts_container_dtypes():
+    """Codes arrive in their container dtype (u8/u16/u32) from the codec;
+    the kernel casts internally and the stream must not depend on it."""
+    for width, dt in [(6, jnp.uint8), (11, jnp.uint16), (19, jnp.uint32)]:
+        codes = _codes(213, width, seed=width)
+        narrow = codes.astype(dt)
+        np.testing.assert_array_equal(
+            np.asarray(bitpack.pack(narrow, width, interpret=True)),
+            np.asarray(bitpack.pack(codes, width, interpret=True)),
+        )
+
+
+def test_public_packing_routes_through_ops(monkeypatch):
+    """core.packing.pack/unpack are thin veneers over kernels.ops — the
+    dispatch layer (and on TPU, the Pallas kernels) sees every wire call."""
+    calls = []
+    real_pack, real_unpack = ops.pack_bits, ops.unpack_bits
+    monkeypatch.setattr(ops, "pack_bits",
+                        lambda c, w: calls.append("pack") or real_pack(c, w))
+    monkeypatch.setattr(ops, "unpack_bits",
+                        lambda w_, w, n: calls.append("unpack")
+                        or real_unpack(w_, w, n))
+    codes = _codes(100, 11)
+    words = packing.pack(codes, 11)
+    back = packing.unpack(words, 11, 100)
+    assert calls == ["pack", "unpack"]
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(codes))
+
+
+def test_ref_oracles_delegate_to_canonical_packer():
+    codes = _codes(77, 19)
+    np.testing.assert_array_equal(
+        np.asarray(ref.ref_pack(codes, 19)),
+        np.asarray(packing._pack_jnp(codes, 19)))
+    words = packing._pack_jnp(codes, 19)
+    np.testing.assert_array_equal(
+        np.asarray(ref.ref_unpack(words, 19, 77)),
+        np.asarray(packing._unpack_jnp(words, 19, 77)))
+
+
+def test_width_validation():
+    codes = jnp.zeros((4,), jnp.uint32)
+    for bad in (0, 33, -1):
+        with pytest.raises(ValueError):
+            bitpack.pack(codes, bad)
+        with pytest.raises(ValueError):
+            bitpack.unpack(codes, bad, 4)
+        with pytest.raises(ValueError):
+            packing.pack(codes, bad)
+
+
+def test_moved_bytes_tight_at_aligned_sizes():
+    """The padded HBM traffic of the kernel stays within 2x of the minimal
+    in+out bytes for realistic sizes (the roofline acceptance bound)."""
+    from repro.roofline.analysis import packbits_bound_bytes
+
+    for width in ZOO_WIDTHS:
+        for n in (1 << 16, 1 << 20, 12_345):
+            moved = bitpack.pack_moved_bytes(n, width)
+            bound = packbits_bound_bytes(n, width)
+            assert bound <= moved <= 2 * bound, (width, n, moved, bound)
+            assert bitpack.unpack_moved_bytes(n, width) == moved

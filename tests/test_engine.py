@@ -80,6 +80,57 @@ def test_engine_matches_reference_loop():
         assert d.mean() <= 1e-4, d.mean()
 
 
+def test_fused_aggregation_matches_unfused_engine():
+    """The compressed-domain server path (DESIGN.md §13) vs the unfused
+    decompress→FedAvg→recompress engine at cohort 8: identical cohort
+    semantics, byte-exact `WireTable` ledgers, server trees within one
+    transport-quantization step (the fused path's only extra rounding)."""
+    sim = simulate.SimConfig(local_steps=2, client_lr=0.1)
+    key = jax.random.PRNGKey(0)
+    out = {}
+    for fused in (False, True):
+        out[fused] = engine.run_training_vectorized(
+            cf, CFG, OMC, sim, engine.CohortSpec(PLAN), DATA_FN, key,
+            num_rounds=2, eval_every=100, fused_agg=fused,
+        )
+    (ref_storage, ref_hist), (f_storage, f_hist) = out[False], out[True]
+    for rh, fh in zip(ref_hist, f_hist):
+        assert rh["cohort"] == fh["cohort"]
+        assert rh["dropped"] == fh["dropped"]
+        # the ledger is mask-based and transport-independent: byte-exact
+        assert rh["down_bytes"] == fh["down_bytes"]
+        assert rh["up_bytes"] == fh["up_bytes"]
+        assert abs(rh["loss"] - fh["loss"]) < 1e-3
+    a, b = decompress_tree(ref_storage), decompress_tree(f_storage)
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        d = np.abs(np.asarray(x) - np.asarray(y))
+        # fused uploads are transport-requantized (one extra RNE per element
+        # per round); bound = one S1E3M7 step at unit scale, tiny mean drift
+        assert d.max() <= 6e-3, d.max()
+        assert d.mean() <= 1e-3, d.mean()
+
+
+def test_fused_aggregation_gating():
+    """`fused_aggregation_supported` picks the path; unsupported configs
+    must refuse loudly rather than silently fall back."""
+    spec = engine.CohortSpec(PLAN)
+    assert engine.fused_aggregation_supported(spec, OMC)
+    f32 = engine.profile("f32").resolve(OMC)  # identity format: OMC disabled
+    assert not f32.enabled and not engine.fused_aggregation_supported(spec, f32)
+    assert not engine.fused_aggregation_supported(spec, OMC, strategy=object())
+    hetero = engine.CohortSpec(
+        CohortPlan(num_clients=16, cohort_size=8),
+        tiers=(engine.profile("s1e3m7"), engine.profile("f32")),
+    )
+    assert not engine.fused_aggregation_supported(hetero, OMC)
+    with pytest.raises(ValueError):
+        engine.run_training_vectorized(
+            cf, CFG, OMC, simulate.SimConfig(), hetero, DATA_FN,
+            jax.random.PRNGKey(0), num_rounds=1, fused_agg=True,
+        )
+
+
 def test_download_accounting_reconciles_with_codec():
     params = cf.init(jax.random.PRNGKey(0), CFG)
     specs = cf.param_specs(CFG)
