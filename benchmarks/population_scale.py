@@ -1,0 +1,228 @@
+"""Sharded population runtime scale sweep (DESIGN.md §14, ISSUE 9).
+
+    PYTHONPATH=src python benchmarks/population_scale.py            # full
+    PYTHONPATH=src python benchmarks/population_scale.py --smoke    # CI-sized
+
+Three sections, one committed artifact (``experiments/bench/
+population_scale.json``):
+
+  * **sweep** — streamed tree-aggregated rounds at populations 1k -> 100k
+    (one fixed-capacity compiled program for the whole sweep): client
+    updates/s, round wall time, the StreamLedger's analytic peak bound and
+    the measured live device bytes sampled from the ``on_chunk`` hook.
+    Acceptance: the bound is *identical* across the sweep and measured
+    peaks stay flat (within 1.5x of the smallest population) — peak memory
+    is a function of stream capacity, never of population size.
+  * **ef_at_rest** — PopulationStore residual bytes, packed vs f32, at a
+    small population (the at-rest ratio is population-independent).
+  * **serve** — hot-swap under synthetic query traffic
+    (:func:`repro.scale.serve_driver.run_serve_under_swap`): steady-state
+    latency, swap wall time, and the swap-stall ratio.  Acceptance: the
+    first query after a swap stays within 10x of the steady-state median
+    (a recompile would be orders of magnitude).
+"""
+
+import argparse
+import sys
+import time
+
+sys.path.insert(0, __file__.rsplit("/", 2)[0])
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import print_table, save_result
+from repro.api import codecs
+from repro.api.session import ServeSession
+from repro.core.omc import OMCConfig
+from repro.data.synthetic import make_frame_task
+from repro.federated import accounting, engine, simulate
+from repro.federated.cohort import CohortPlan
+from repro.federated.state import compress_params
+from repro.models import conformer as cf
+from repro.models import transformer as tr
+from repro.scale import (
+    PopulationStore,
+    ShardLayout,
+    make_root_fn,
+    run_round_sharded,
+    run_serve_under_swap,
+    synthetic_token_batch,
+)
+from repro.scale.stream import make_stream_fn
+
+OMC = OMCConfig.parse("S1E3M7")
+CFG = cf.ConformerConfig(
+    n_layers=2, d_model=32, n_heads=4, d_ff=64, n_classes=16, d_in=8
+)
+SIM = simulate.SimConfig(local_steps=2, client_lr=0.1)
+
+
+def _live_device_bytes() -> int:
+    return sum(int(np.prod(a.shape)) * a.dtype.itemsize
+               for a in jax.live_arrays())
+
+
+def sweep_section(populations, cohort, capacity, shards, rounds):
+    specs = cf.param_specs(CFG)
+    key = jax.random.PRNGKey(0)
+    params = cf.init(key, CFG)
+    table = accounting.build_wire_table(params, specs, OMC)
+    storage0 = compress_params(params, specs, OMC)
+    # ONE compiled program pair for every population in the sweep — the
+    # traced shapes depend on capacity alone, which is the §14 point
+    task = make_frame_task(d_in=CFG.d_in, n_classes=CFG.n_classes,
+                           seq_len=24, num_clients=max(populations))
+    data_fn = lambda c, r, s: task.batch(c, r, s, 4)
+    stream_fn = make_stream_fn(cf, CFG, specs, OMC, SIM, data_fn, capacity)
+    root_fn = make_root_fn(specs, OMC, SIM)
+
+    rows = []
+    for population in populations:
+        plan = CohortPlan(num_clients=population, cohort_size=cohort,
+                          failure_rate=0.1)
+        layout = ShardLayout(population, shards)
+        store = PopulationStore(layout)
+        ledger = accounting.StreamLedger(table, OMC, capacity)
+        peak = [0]
+
+        def on_chunk(shard, n_real, n_chunks):
+            peak[0] = max(peak[0], _live_device_bytes())
+
+        storage = storage0
+        # round 0 warms the jit cache; timed rounds follow
+        storage, _ = run_round_sharded(
+            cf, CFG, specs, OMC, SIM, storage, data_fn, plan, layout, 0,
+            key, capacity=capacity, stream_fn=stream_fn, root_fn=root_fn,
+            store=store, wire_table=table, ledger=ledger, on_chunk=on_chunk,
+        )
+        t0 = time.perf_counter()
+        streamed = 0
+        for r in range(1, rounds + 1):
+            storage, m = run_round_sharded(
+                cf, CFG, specs, OMC, SIM, storage, data_fn, plan, layout, r,
+                key, capacity=capacity, stream_fn=stream_fn, root_fn=root_fn,
+                store=store, wire_table=table, ledger=ledger,
+                on_chunk=on_chunk,
+            )
+            streamed += m["cohort"] + m["dropped"]
+        dt = time.perf_counter() - t0
+        rows.append(dict(
+            population=population,
+            shards=shards,
+            cohort=cohort,
+            capacity=capacity,
+            rounds=rounds,
+            round_wall_s=round(dt / rounds, 3),
+            updates_per_s=round(streamed / dt, 1),
+            chunks=int(ledger.chunks),
+            peak_bound_bytes=int(ledger.peak_bound_bytes()),
+            peak_measured_device_bytes=int(peak[0]),
+            host_counter_bytes=int(store.bytes_report()["counter_bytes"]),
+        ))
+
+    bounds = {r["peak_bound_bytes"] for r in rows}
+    assert len(bounds) == 1, (
+        f"StreamLedger bound must be population-independent, got {bounds}"
+    )
+    measured = [r["peak_measured_device_bytes"] for r in rows]
+    assert max(measured) <= 1.5 * min(measured), (
+        f"measured device peak grew with population: {measured}"
+    )
+    print_table(
+        "streamed rounds: population sweep (fixed capacity "
+        f"{rows[0]['capacity']})", rows,
+        ["population", "shards", "cohort", "chunks", "round_wall_s",
+         "updates_per_s", "peak_bound_bytes", "peak_measured_device_bytes",
+         "host_counter_bytes"],
+    )
+    return rows
+
+
+def ef_section(population=1_000, shards=8):
+    specs = cf.param_specs(CFG)
+    params = cf.init(jax.random.PRNGKey(0), CFG)
+    out = {}
+    for fmt in (None, "S1E4M14", "S1E3M7"):
+        store = PopulationStore(ShardLayout(population, shards))
+        store.init_ef(params, specs, OMC, ef_fmt=fmt)
+        rep = store.bytes_report()
+        out[fmt or "f32"] = dict(
+            ef_at_rest_bytes=rep["ef_at_rest_bytes"],
+            ratio_vs_f32=round(
+                rep["ef_at_rest_bytes"] / max(rep["ef_fp32_bytes"], 1), 3
+            ),
+        )
+    rows = [dict(fmt=k, **v) for k, v in out.items()]
+    print_table(f"EF residuals at rest ({population} clients)", rows,
+                ["fmt", "ef_at_rest_bytes", "ratio_vs_f32"])
+    assert out["S1E3M7"]["ratio_vs_f32"] < 0.5  # ~11/32 + per-row PVT
+    return out
+
+
+def serve_section(swaps, queries_per_swap, decode_steps):
+    cfg = tr.TransformerConfig(n_layers=2, d_model=32, n_heads=2,
+                               n_kv_heads=1, d_ff=64, vocab=128)
+    specs = tr.param_specs(cfg)
+    key = jax.random.PRNGKey(1)
+    params = tr.init(key, cfg)
+    session = ServeSession(tr, cfg, compress_params(params, specs, OMC))
+    payloads = []
+    for i in range(swaps):
+        k = jax.random.fold_in(key, i + 1)
+        perturbed = jax.tree_util.tree_map(
+            lambda p, kk=k: p + 0.01 * jax.random.normal(kk, p.shape,
+                                                         p.dtype),
+            params,
+        )
+        payloads.append(
+            codecs.encode_payload(compress_params(perturbed, specs, OMC),
+                                  round_index=i + 1)
+        )
+    stats = run_serve_under_swap(
+        session, payloads,
+        make_query=lambda i: synthetic_token_batch(1, 4, cfg.vocab, seed=i),
+        queries_per_swap=queries_per_swap, decode_steps=decode_steps,
+    )
+    print_table("serve under hot-swap", [stats],
+                ["queries", "swaps", "query_ms_p50", "query_ms_p95",
+                 "swap_ms_mean", "swap_ms_max", "swap_stall_ratio"])
+    assert stats["swaps"] == swaps
+    assert stats["swap_stall_ratio"] < 10.0, (
+        f"post-swap query stalled {stats['swap_stall_ratio']:.1f}x — did "
+        "hot_swap trigger a recompile?"
+    )
+    return stats
+
+
+def run(smoke: bool = False):
+    if smoke:
+        populations, cohort, capacity, shards, rounds = (
+            [200, 1_000], 16, 8, 2, 1
+        )
+        swaps, qps, steps = 2, 4, 3
+    else:
+        populations, cohort, capacity, shards, rounds = (
+            [1_000, 10_000, 100_000], 128, 32, 8, 2
+        )
+        swaps, qps, steps = 4, 8, 4
+    payload = dict(
+        config=dict(
+            model="conformer-tiny", omc=OMC.fmt.name, cohort=cohort,
+            capacity=capacity, shards=shards, smoke=bool(smoke),
+        ),
+        sweep=sweep_section(populations, cohort, capacity, shards, rounds),
+        ef_at_rest=ef_section(),
+        serve=serve_section(swaps, qps, steps),
+    )
+    path = save_result("population_scale", payload)
+    print(f"\nwrote {path}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (small populations, 1 round)")
+    args = ap.parse_args()
+    run(smoke=args.smoke)

@@ -1,0 +1,104 @@
+"""Sharded population runtime walkthrough (README cookbook 14).
+
+Runs tree-aggregated, streamed federated rounds over a population far
+larger than any cohort the flat engine could stack (DESIGN.md §14):
+
+  * the population's per-client state (counters + optional packed-at-rest
+    error-feedback residuals) lives in a
+    :class:`repro.scale.store.PopulationStore` partitioned by a
+    :class:`~repro.scale.store.ShardLayout`,
+  * each round streams the cohort through ONE fixed-capacity compiled
+    program per shard chunk (peak memory = f(capacity), not population),
+  * per-shard partial sums combine at the root with the exact server
+    algebra of the flat engine (equivalence-gated in tests/test_scale.py).
+
+    PYTHONPATH=src python examples/population_scale.py
+    PYTHONPATH=src python examples/population_scale.py \
+        --population 50000 --shards 16 --capacity 64 --rounds 3 --fused
+
+``--fused`` aggregates in the fused transport-encoded mode (DESIGN.md
+§13/§14); ``--ef-fmt S1E4M14`` keeps topk error-feedback residuals packed
+at rest and reports the at-rest byte ratio.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.compress import get_strategy
+from repro.core.omc import OMCConfig
+from repro.data.synthetic import make_frame_task
+from repro.federated import simulate
+from repro.federated.cohort import CohortPlan
+from repro.models import conformer as cf
+from repro.scale import PopulationStore, ShardLayout, run_training_sharded
+
+CFG = cf.ConformerConfig(
+    n_layers=2, d_model=32, n_heads=4, d_ff=64, n_classes=16, d_in=8
+)
+OMC = OMCConfig.parse("S1E3M7")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--population", type=int, default=10_000)
+    ap.add_argument("--shards", type=int, default=8)
+    ap.add_argument("--cohort", type=int, default=64)
+    ap.add_argument("--capacity", type=int, default=16,
+                    help="stream chunk width (bounds peak memory)")
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--fused", action="store_true",
+                    help="compressed-domain aggregation (DESIGN.md §13/§14)")
+    ap.add_argument("--ef-fmt", default=None,
+                    help="train under EF top-k with residuals packed at "
+                         "rest in this format (e.g. S1E4M14)")
+    args = ap.parse_args()
+
+    plan = CohortPlan(num_clients=args.population, cohort_size=args.cohort,
+                      failure_rate=0.1)
+    layout = ShardLayout(args.population, args.shards)
+    task = make_frame_task(d_in=CFG.d_in, n_classes=CFG.n_classes,
+                           seq_len=24, num_clients=args.population)
+    data_fn = lambda c, r, s: task.batch(c, r, s, 4)
+    sim = simulate.SimConfig(local_steps=2, client_lr=0.1)
+    key = jax.random.PRNGKey(0)
+
+    strategy = None
+    store = None
+    if args.ef_fmt:
+        if args.fused:
+            raise SystemExit("--fused and --ef-fmt are mutually exclusive "
+                             "(zoo strategies gate fused off, DESIGN.md §13)")
+        strategy = get_strategy("topk", density=0.25)
+        store = PopulationStore(layout)
+        store.init_ef(cf.init(key, CFG), cf.param_specs(CFG), OMC,
+                      ef_fmt=args.ef_fmt)
+
+    print(f"population={args.population} shards={args.shards} "
+          f"cohort={args.cohort} capacity={args.capacity} "
+          f"fused={args.fused} ef_fmt={args.ef_fmt}")
+    storage, history, ledger = run_training_sharded(
+        cf, CFG, OMC, sim, plan, layout, data_fn, key, args.rounds,
+        capacity=args.capacity, fused_agg=args.fused, strategy=strategy,
+        store=store, wire=strategy is None, log=print,
+    )
+    for h in history:
+        print(f"round {h['round']}: loss={h['loss']:.4f} "
+              f"cohort={h['cohort']} shards={h['shards']} "
+              f"chunks={h['chunks']}")
+    if ledger is not None:
+        snap = ledger.snapshot()
+        print(f"streamed {snap['clients_streamed']} client updates in "
+              f"{snap['chunks']} chunks; peak resident model bytes bounded "
+              f"by {snap['peak_bound_bytes']:,} (capacity-determined)")
+    if store is not None:
+        rep = store.bytes_report()
+        print(f"EF at rest: {rep['ef_at_rest_bytes']:,} B "
+              f"({rep['ef_fmt']}) vs f32 {rep['ef_fp32_bytes']:,} B "
+              f"-> x{rep['ef_at_rest_bytes'] / rep['ef_fp32_bytes']:.2f}")
+
+
+if __name__ == "__main__":
+    main()

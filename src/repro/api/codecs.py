@@ -315,7 +315,10 @@ def _encode_omc(cv: CompressedVariable, base) -> Tuple[Dict[str, Any], List[byte
         kind="omc",
         fmt=fmt.name,
         shape=list(cv.codes.shape),
-        sb_shape=list(s.shape),
+        # np.ascontiguousarray promotes 0-d to 1-d — record the true shape
+        # so scalar (per-tensor) PVT params survive the roundtrip and a
+        # hot-swapped tree keeps the exact jit-cache signature
+        sb_shape=list(np.shape(cv.s)),
         mode="full",
     )
     full_words = _pack_np(codes, fmt.bits)

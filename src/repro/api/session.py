@@ -506,6 +506,10 @@ class ServeSession:
         self._prefill = jax.jit(prefill_fn)
         self._decode = jax.jit(decode_fn)
         self.swaps = 0
+        self.queries = 0
+        # per-swap wall ms (decode payload + materialize the new storage) —
+        # the serve-under-swap driver (repro.scale.serve_driver) reads these
+        self.swap_ms: List[float] = []
 
     @classmethod
     def from_payload(cls, family, cfg, payload: bytes, **kw) -> "ServeSession":
@@ -515,9 +519,18 @@ class ServeSession:
     def hot_swap(self, payload: bytes) -> codecs.PayloadInfo:
         """Ingest a new round's model; delta payloads apply against the
         currently-served tree (digest-verified — a wrong-round payload
-        raises rather than corrupting the served weights)."""
+        raises rather than corrupting the served weights).  Swap wall time
+        (decode + materialized new storage) lands in ``swap_ms``."""
+        import time
+
+        t0 = time.perf_counter()
         self.storage, info = codecs.decode_payload(payload, base=self.storage)
+        jax.block_until_ready(
+            [l for l in jax.tree_util.tree_leaves(self.storage)
+             if hasattr(l, "block_until_ready")]
+        )
         self.swaps += 1
+        self.swap_ms.append((time.perf_counter() - t0) * 1e3)
         return info
 
     def init_cache(self, batch: int, max_len: int, dtype=jnp.float32):
@@ -543,4 +556,15 @@ class ServeSession:
             cache, logits = self.decode_step(cache, tok)
             tok = pick(logits[:, -1])[:, None]
             out.append(tok)
+        self.queries += 1
         return cache, jnp.concatenate(out, axis=1)
+
+    def serve_stats(self) -> Dict[str, Any]:
+        """Swap/query telemetry for serve-under-swap reporting."""
+        return dict(
+            swaps=int(self.swaps),
+            queries=int(self.queries),
+            swap_ms_mean=(float(jnp.mean(jnp.asarray(self.swap_ms)))
+                          if self.swap_ms else 0.0),
+            swap_ms_max=(float(max(self.swap_ms)) if self.swap_ms else 0.0),
+        )

@@ -3,14 +3,19 @@
 Sync state goes through :func:`save_state` / :func:`restore_state`;
 the async runtime's full mid-buffer snapshot (server storage + buffer +
 version-stamped pending tickets) through :func:`save_async_state` /
-:func:`restore_async_state` (DESIGN.md §10).
+:func:`restore_async_state` (DESIGN.md §10); sharded population state
+(counters + at-rest-compressed EF residuals, layout-stamped) through
+:func:`save_population_state` / :func:`restore_population_state`
+(DESIGN.md §14).
 """
 
 from .ckpt import (
     latest_checkpoint,
     restore_state,
     restore_async_state,
+    restore_population_state,
     save_state,
     save_async_state,
+    save_population_state,
     gc_checkpoints,
 )

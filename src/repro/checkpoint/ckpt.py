@@ -15,6 +15,14 @@ Design:
 The CompressedVariable codes are stored as their uint containers — a
 checkpoint of an OMC state is itself compressed (~the paper's parameter
 memory ratio on disk).
+
+Sharded-population state (DESIGN.md §14) checkpoints through
+:func:`save_population_state` / :func:`restore_population_state`: the
+manifest stamps the :class:`repro.scale.store.ShardLayout` identity and
+the EF at-rest format, and restore *refuses* a cross-layout load — a
+residual row silently landing on the wrong client would corrupt error
+feedback invisibly.  Async checkpoints of population-backed runners stamp
+the same ``population_layout`` and save counters as dense arrays.
 """
 
 from __future__ import annotations
@@ -140,6 +148,13 @@ def _async_state_tree(runner) -> Any:
     )
     if getattr(runner, "ef", None) is not None:
         tree["ef"] = dict(runner.ef)
+    if getattr(runner, "population", None) is not None:
+        # dense counter arrays ride in the npz — a large population's
+        # counters as manifest JSON would be multi-MB of boxed ints (§14)
+        tree["counters"] = dict(
+            round=runner.population.round_counters,
+            event=runner.population.event_counters,
+        )
     return tree
 
 
@@ -153,6 +168,7 @@ def save_async_state(ckpt_dir: str, runner, keep: int = 3) -> str:
     needs, since traces are pure functions of their checkpointed counters.
     The step counter is ``events_processed`` (monotone across a run).
     """
+    pop = getattr(runner, "population", None)
     extra = dict(
         kind="async_runner",
         version=int(runner.version),
@@ -167,10 +183,15 @@ def save_async_state(ckpt_dir: str, runner, keep: int = 3) -> str:
                  for c, p in runner.pending.items()],
         idle=[[int(c), float(t)] for c, t in runner.idle.items()],
         version_keys=sorted(int(v) for v in runner.version_storages),
-        event_counters={str(c): int(k)
-                        for c, k in runner.event_counters.items()},
-        round_counters={str(c): int(k)
-                        for c, k in runner.round_counters.items()},
+        # population-backed counters travel as arrays in the state tree
+        event_counters=(None if pop is not None else
+                        {str(c): int(k)
+                         for c, k in runner.event_counters.items()}),
+        round_counters=(None if pop is not None else
+                        {str(c): int(k)
+                         for c, k in runner.round_counters.items()}),
+        population_layout=(pop.layout.describe() if pop is not None
+                           else None),
         trained_losses={f"{v}|{c}": float(l)
                         for (v, c), (_, l) in runner.trained.items()},
         has_ef=getattr(runner, "ef", None) is not None,
@@ -207,6 +228,16 @@ def restore_async_state(path: str, runner) -> Dict[str, Any]:
             f"fused_agg={bool(getattr(runner, 'fused_agg', False))} — "
             "construct the runner the same way (DESIGN.md §13)"
         )
+    pop = getattr(runner, "population", None)
+    ck_layout = extra.get("population_layout")
+    my_layout = pop.layout.describe() if pop is not None else None
+    if ck_layout != my_layout:
+        raise ValueError(
+            "population layout mismatch: checkpoint was written with "
+            f"layout={ck_layout} but the runner has layout={my_layout} — "
+            "construct the runner with the same ShardLayout (or None); "
+            "cross-layout restore needs an offline reshard (DESIGN.md §14)"
+        )
     # fused buffers/trained caches hold transport-encoded uploads, whose
     # tree structure matches the storage tree; unfused ones are f32 trees
     entry_t = runner.storage if fused else _decompressed_template(runner.storage)
@@ -226,6 +257,9 @@ def restore_async_state(path: str, runner) -> Dict[str, Any]:
         )
     if has_ef:
         template["ef"] = dict(runner.ef)
+    if pop is not None:
+        template["counters"] = dict(round=pop.round_counters,
+                                    event=pop.event_counters)
     state, _ = restore_state(path, template)
 
     from repro.federated.async_engine import _BufferEntry, _Pending
@@ -245,12 +279,21 @@ def restore_async_state(path: str, runner) -> Dict[str, Any]:
         for c, b, r, t in extra["pending"]
     }
     runner.idle = {int(c): float(t) for c, t in extra["idle"]}
-    runner.event_counters = {
-        int(c): int(k) for c, k in extra["event_counters"].items()
-    }
-    runner.round_counters = {
-        int(c): int(k) for c, k in extra["round_counters"].items()
-    }
+    if pop is not None:
+        # in-place writes keep the runner's ArrayCounters views bound
+        pop.round_counters[:] = np.asarray(
+            jax.device_get(state["counters"]["round"]), np.int64
+        )
+        pop.event_counters[:] = np.asarray(
+            jax.device_get(state["counters"]["event"]), np.int64
+        )
+    else:
+        runner.event_counters = {
+            int(c): int(k) for c, k in extra["event_counters"].items()
+        }
+        runner.round_counters = {
+            int(c): int(k) for c, k in extra["round_counters"].items()
+        }
     runner.version_storages = {
         int(v): s for v, s in state["versions"].items()
     }
@@ -273,6 +316,60 @@ def restore_async_state(path: str, runner) -> Dict[str, Any]:
             int(c): int(b) for c, b in extra["stats"]["pending"].items()
         }
     runner._rebuild_heap()
+    return extra
+
+
+def save_population_state(ckpt_dir: str, step: int, store,
+                          keep: int = 3) -> str:
+    """Checkpoint a :class:`repro.scale.store.PopulationStore` (§14).
+
+    Counters and residual payloads (f32 rows, or packed words + per-row
+    PVT params — the at-rest compression survives on disk) go through the
+    atomic npz path; the manifest stamps the shard-layout identity and the
+    EF format so :func:`restore_population_state` can refuse a mismatched
+    load instead of silently reassigning rows to the wrong clients.
+    """
+    extra = dict(
+        kind="population_store",
+        layout=store.layout.describe(),
+        ef=store.describe_ef(),
+    )
+    return save_state(ckpt_dir, step, store.state_tree(), keep=keep,
+                      extra=extra)
+
+
+def restore_population_state(path: str, store) -> Dict[str, Any]:
+    """Restore a :func:`save_population_state` checkpoint into ``store``.
+
+    ``store`` must be freshly constructed with the *same* ShardLayout and
+    ``init_ef`` configuration the checkpointed run used; any mismatch in
+    layout, EF variable set, or at-rest format raises ValueError.
+    """
+    with open(os.path.join(path, "manifest.json")) as f:
+        extra = json.load(f)["extra"]
+    if extra.get("kind") != "population_store":
+        raise ValueError(f"not a population-store checkpoint: {path}")
+    if extra["layout"] != store.layout.describe():
+        raise ValueError(
+            "population layout mismatch: checkpoint was written with "
+            f"layout={extra['layout']} but the store has "
+            f"layout={store.layout.describe()} — cross-layout restore "
+            "needs an offline reshard (DESIGN.md §14)"
+        )
+    want_ef = store.describe_ef()
+    have_ef = extra.get("ef")
+    if have_ef != (
+        dict(fmt=want_ef["fmt"],
+             vars={k: list(v) for k, v in want_ef["vars"].items()})
+        if want_ef is not None else None
+    ):
+        raise ValueError(
+            "population EF state mismatch: checkpoint has "
+            f"{have_ef} but the store has {want_ef} — call init_ef with "
+            "the same selection policy and ef_fmt before restoring"
+        )
+    state, _ = restore_state(path, store.state_tree())
+    store.load_state_tree(state)
     return extra
 
 

@@ -349,6 +349,80 @@ class AsyncWireStats:
         )
 
 
+@dataclasses.dataclass
+class StreamLedger:
+    """Peak-memory ledger for the fixed-capacity streamed round (§14).
+
+    The :class:`AsyncWireStats` counterpart for *resident bytes* instead of
+    wire bytes: the streamed path's contract is that peak live model state
+    is a function of the stream ``capacity`` alone — never of the cohort or
+    population size.  :meth:`peak_bound_bytes` states that bound
+    analytically from the same :class:`WireTable` rows every other ledger
+    uses:
+
+      * the compressed-at-rest server storage (``download_bytes``),
+      * its transient f32 decode (``fp32_total``),
+      * one ``capacity``-wide stacked chunk of client models,
+      * one f32 partial-sum accumulator tree.
+
+    ``on_chunk`` records actual streaming (and optionally a measured
+    live-bytes sample from the instrumentation hook); the benchmark asserts
+    the bound is constant across a 1k→100k population sweep and that
+    measured peaks respect it (``benchmarks/population_scale.py``).
+    """
+
+    table: WireTable
+    omc: OMCConfig
+    capacity: int
+    chunks: int = 0
+    clients_streamed: int = 0
+    peak_measured_bytes: int = 0
+
+    def __post_init__(self):
+        if self.capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {self.capacity}")
+
+    @property
+    def chunk_stack_bytes(self) -> int:
+        """One fixed-width stacked chunk of f32 client models."""
+        return self.capacity * self.table.fp32_total
+
+    @property
+    def accumulator_bytes(self) -> int:
+        """The running f32 partial-sum tree (one model's worth)."""
+        return self.table.fp32_total
+
+    def peak_bound_bytes(self) -> int:
+        """Analytic peak resident model bytes — capacity-determined only."""
+        return (self.table.download_bytes(self.omc)  # storage at rest
+                + self.table.fp32_total  # transient server decode
+                + self.chunk_stack_bytes
+                + self.accumulator_bytes)
+
+    def on_chunk(self, n_real: int, measured_bytes: Optional[int] = None
+                 ) -> None:
+        if not 1 <= n_real <= self.capacity:
+            raise ValueError(
+                f"chunk holds {n_real} clients, capacity is {self.capacity}"
+            )
+        self.chunks += 1
+        self.clients_streamed += n_real
+        if measured_bytes is not None:
+            self.peak_measured_bytes = max(self.peak_measured_bytes,
+                                           int(measured_bytes))
+
+    def snapshot(self) -> dict:
+        return dict(
+            capacity=int(self.capacity),
+            chunks=int(self.chunks),
+            clients_streamed=int(self.clients_streamed),
+            chunk_stack_bytes=int(self.chunk_stack_bytes),
+            accumulator_bytes=int(self.accumulator_bytes),
+            peak_bound_bytes=int(self.peak_bound_bytes()),
+            peak_measured_bytes=int(self.peak_measured_bytes),
+        )
+
+
 def cohort_upload_bytes(
     table: WireTable, omc: OMCConfig, round_index, client_ids
 ) -> np.ndarray:

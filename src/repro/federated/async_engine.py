@@ -40,6 +40,15 @@ Checkpoint/resume of the full runtime state (buffer, version storages,
 pending tickets, trace counters) lives in
 :func:`repro.checkpoint.save_async_state` /
 :func:`repro.checkpoint.restore_async_state`.
+
+At population scale (DESIGN.md §14) the per-client dict counters become the
+bottleneck; pass ``population=`` (a
+:class:`repro.scale.store.PopulationStore`) to back ``event_counters`` /
+``round_counters`` with the store's dense sharded arrays — the event loop
+is unchanged (the store adapts them through
+:class:`repro.scale.store.ArrayCounters`), and checkpoints stamp the
+population layout.  The sharded synchronous round program itself lives in
+:mod:`repro.scale.hierarchy`.
 """
 
 from __future__ import annotations
@@ -339,9 +348,17 @@ class AsyncRunner:
         strategy=None,
         ste: bool = False,
         fused_agg: bool = False,
+        population=None,
     ):
         if init_key is None and init_params is None:
             raise ValueError("need init_key or init_params")
+        if population is not None and (
+            population.layout.num_clients != int(num_clients)
+        ):
+            raise ValueError(
+                f"population store holds {population.layout.num_clients} "
+                f"clients but the runner was given num_clients={num_clients}"
+            )
         if fused_agg and (strategy is not None or not omc.enabled):
             raise ValueError(
                 "fused_agg=True needs OMC enabled and no zoo strategy "
@@ -403,12 +420,17 @@ class AsyncRunner:
         self.idle: Dict[int, float] = {  # cid -> next check-in time
             c: self.trace.first_checkin(c) for c in range(self.num_clients)
         }
-        self.event_counters: Dict[int, int] = {
-            c: 0 for c in range(self.num_clients)
-        }
-        self.round_counters: Dict[int, int] = {  # cid -> rounds started
-            c: 0 for c in range(self.num_clients)
-        }
+        # per-client counters: plain dicts, or — with ``population=`` — the
+        # store's dense sharded arrays behind the same mapping surface (§14)
+        self.population = population
+        if population is not None:
+            self.event_counters: Any = population.event_view()
+            self.round_counters: Any = population.round_view()
+        else:
+            self.event_counters = {c: 0 for c in range(self.num_clients)}
+            self.round_counters = {  # cid -> rounds started
+                c: 0 for c in range(self.num_clients)
+            }
         self.version_storages: Dict[int, Any] = {}  # v -> storage at v
         self.trained: Dict[Tuple[int, int], Tuple[Any, float]] = {}
         self.history: List[Dict[str, Any]] = []

@@ -39,6 +39,15 @@ whole cohort has trained.  When the fleet is straggler-dominated (heavy-tail
 latency, diurnal availability), use the event-driven non-barrier runtime
 :mod:`repro.federated.async_engine` (DESIGN.md §10), which batches its
 local training through the same ``make_client_fn`` body.
+
+Both this engine and the async runtime still stack the whole cohort in one
+program, so cohort size is bounded by device memory.  For populations far
+beyond that — 100k–1M simulated clients streamed through fixed memory with
+two-level tree aggregation over a :class:`repro.scale.store.ShardLayout` —
+use :mod:`repro.scale` (DESIGN.md §14), which chunks the same client body
+through :func:`repro.scale.stream.make_stream_fn` and reuses this module's
+:func:`mask_dead_rows` / :func:`apply_server_step` so the server algebra
+cannot drift between the flat and treed paths.
 """
 
 from __future__ import annotations
@@ -249,6 +258,47 @@ def transport_encode_stacked(stacked_leaf, fmt: FloatFormat, pvt: bool,
 
 
 # ---------------------------------------------------------------------------
+# Server-side round algebra — shared with the sharded runtime (repro.scale)
+# ---------------------------------------------------------------------------
+
+
+def mask_dead_rows(stacked, alive):
+    """Zero dead clients' rows in a ``[C, ...]`` stack (NaN-safe FedAvg).
+
+    The reference loop never computes dropped clients; the engine computes
+    them and weights them 0.  ``0·x`` annihilates exactly for finite x, but
+    a diverged dead client (non-finite update) would poison the mean as
+    ``0·inf = NaN`` — zero dead entries outright so the paths stay
+    equivalent even when clients blow up.  The streamed partial-aggregate
+    program (:mod:`repro.scale.stream`) applies the identical guard before
+    its weighted sums.
+    """
+    return jax.tree_util.tree_map(
+        lambda x: jnp.where(
+            jnp.asarray(alive).reshape((-1,) + (1,) * (x.ndim - 1)), x, 0.0
+        ),
+        stacked,
+    )
+
+
+def apply_server_step(server_f32, mean_model, specs, omc: OMCConfig,
+                      server_lr: float):
+    """The server half of every unfused round, in one place.
+
+    Interpolate toward the cohort mean with ``server_lr`` and re-compress
+    under the policy — used verbatim by this engine's ``finish`` and by
+    the sharded root combine (:func:`repro.scale.hierarchy.make_root_fn`),
+    so flat and tree-aggregated rounds share one requantization step and
+    one interpolation formula by construction.
+    """
+    new_f32 = jax.tree_util.tree_map(
+        lambda old, new: old + server_lr * (new - old),
+        server_f32, mean_model,
+    )
+    return compress_params(new_f32, specs, omc) if omc.enabled else new_f32
+
+
+# ---------------------------------------------------------------------------
 # The compiled round: data gen + vmapped clients + aggregation + re-compress,
 # all tiers, one XLA program.
 # ---------------------------------------------------------------------------
@@ -363,26 +413,11 @@ def make_round_fn(
 
     def finish(server_f32, stacked, loss_c, alive):
         w = alive.astype(jnp.float32)
-        # The reference loop never computes dropped clients; the engine
-        # computes them and weights them 0.  0·x annihilates exactly for
-        # finite x, but a diverged dead client (non-finite update) would
-        # poison the mean as 0·inf = NaN — zero dead entries outright so
-        # the two paths stay equivalent even when clients blow up.
-        stacked = jax.tree_util.tree_map(
-            lambda x: jnp.where(
-                alive.reshape((-1,) + (1,) * (x.ndim - 1)), x, 0.0
-            ),
-            stacked,
-        )
+        stacked = mask_dead_rows(stacked, alive)
         loss_c = jnp.where(alive, loss_c, 0.0)
         mean_model = cohort_lib.aggregate_weighted(stacked, w)
-        new_f32 = jax.tree_util.tree_map(
-            lambda old, new: old + sim.server_lr * (new - old),
-            server_f32, mean_model,
-        )
-        new_storage = (
-            compress_params(new_f32, specs, omc) if omc.enabled else new_f32
-        )
+        new_storage = apply_server_step(server_f32, mean_model, specs, omc,
+                                        sim.server_lr)
         n_alive = w.sum()
         loss = (loss_c * w).sum() / jnp.maximum(n_alive, 1.0)
         return new_storage, loss, n_alive

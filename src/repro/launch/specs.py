@@ -148,6 +148,31 @@ def annotate_state(state_struct, specs, mesh):
     )
 
 
+def population_sharding(mesh, ndim: int, leading: int = 0):
+    """NamedSharding for stacked per-client state: shard axis 0 on "clients".
+
+    ``leading`` is the size of axis 0 when known; if the mesh lacks a
+    ``clients`` axis, or the axis size does not divide ``leading``, the
+    array is replicated (correct, just not distributed) — single-device
+    test topologies always take this fallback.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = sizes.get("clients", 1)
+    if "clients" not in sizes or n <= 1 or (leading and leading % n != 0):
+        return NamedSharding(mesh, P())
+    return NamedSharding(mesh, P("clients", *(None,) * (ndim - 1)))
+
+
+def annotate_population(tree, mesh):
+    """device_put a stacked [num_clients, ...] pytree with client sharding."""
+    return jax.tree_util.tree_map(
+        lambda x: jax.device_put(
+            x, population_sharding(mesh, jnp.ndim(x), jnp.shape(x)[0])
+        ),
+        tree,
+    )
+
+
 _KV = (None, "batch", "kv_seq", "tensor", None)  # [L, B, S, KVH, hd]
 _KVPOS = (None, "batch", "kv_seq")
 

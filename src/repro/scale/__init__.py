@@ -1,0 +1,41 @@
+"""Sharded population runtime: toward 1M simulated clients (DESIGN.md §14).
+
+Layers (each usable alone):
+
+  * :mod:`repro.scale.store` — :class:`ShardLayout` + :class:`PopulationStore`:
+    per-client server state (EF residuals, counters) sharded by client-id
+    blocks and kept compressed at rest,
+  * :mod:`repro.scale.stream` — the fixed-capacity compiled
+    partial-aggregate program (peak memory bounded by ``capacity``, not
+    cohort size),
+  * :mod:`repro.scale.hierarchy` — two-level tree aggregation
+    (per-shard leaf partials → root combine), equivalence-gated against
+    the flat engine,
+  * :mod:`repro.scale.serve_driver` — hot-swap under sustained query
+    traffic (the serving half of the scale story).
+"""
+
+from .hierarchy import (
+    make_root_fn,
+    run_round_sharded,
+    run_training_sharded,
+    tree_aggregate,
+)
+from .serve_driver import run_serve_under_swap, synthetic_token_batch
+from .store import ArrayCounters, PopulationStore, ShardLayout
+from .stream import iter_chunks, make_stream_fn, pad_chunk
+
+__all__ = [
+    "ArrayCounters",
+    "PopulationStore",
+    "ShardLayout",
+    "iter_chunks",
+    "make_root_fn",
+    "make_stream_fn",
+    "pad_chunk",
+    "run_round_sharded",
+    "run_serve_under_swap",
+    "run_training_sharded",
+    "synthetic_token_batch",
+    "tree_aggregate",
+]

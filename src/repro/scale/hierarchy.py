@@ -1,0 +1,297 @@
+"""Two-level tree aggregation over a sharded population (DESIGN.md §14).
+
+The flat engine aggregates a round in one reduction over the stacked
+cohort.  At population scale the cohort's members live in different shards
+(:class:`repro.scale.store.ShardLayout`) — potentially on different hosts —
+so aggregation goes through a two-level tree instead:
+
+  * **leaves** — each shard streams its cohort members through the
+    fixed-capacity partial-aggregate program
+    (:func:`repro.scale.stream.make_stream_fn`), producing the shard's
+    weighted sums ``(Σ w·model, Σ w, Σ w·loss)``,
+  * **root** — the per-shard sums are added and normalized **once**
+    (``mean = Σ_shards Σ w·x / max(Σ w, 1e-9)`` — algebraically identical
+    to :func:`repro.federated.cohort.aggregate_weighted` on the flat
+    stack), then the ordinary server step runs: interpolate toward the
+    mean with ``sim.server_lr`` and re-compress
+    (:func:`repro.federated.engine.apply_server_step` — the exact helper
+    the flat engine's ``finish`` uses).
+
+Equivalence contract (tier-1, ``tests/test_scale.py``): with the same
+``key``/``round_index`` the sharded round consumes the *identical* cohort
+sample and survival mask as ``engine.run_round_vectorized`` (both defer to
+:mod:`repro.federated.cohort`), and the treed result matches the flat
+round within one quantization step — the only differences are f32
+reassociation across chunk/shard boundaries (the documented engine-vs-loop
+tolerance) and, under ``fused_agg``, the same single transport-RNE per
+upload the fused flat path applies.  Wire ledgers are byte-exact: the
+bytes a client uploads do not depend on which shard aggregates it, so
+metrics reuse :func:`repro.federated.engine.round_wire_metrics` unchanged.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.omc import OMCConfig
+from repro.core.store import decompress_tree
+from repro.federated import accounting
+from repro.federated import cohort as cohort_lib
+from repro.federated import engine, simulate
+from repro.federated.simulate import SimConfig
+from repro.federated.state import compress_params
+
+from .store import PopulationStore, ShardLayout
+from .stream import iter_chunks, make_stream_fn, pad_chunk
+
+
+def tree_aggregate(stacked, weights, num_shards: int):
+    """Pure two-level weighted mean (the tree-aggregation algebra).
+
+    Splits the leading client axis into ``num_shards`` contiguous balanced
+    groups (the :class:`~repro.scale.store.ShardLayout` partition rule),
+    computes per-group weighted sums, then combines and normalizes at the
+    root.  Equals :func:`repro.federated.cohort.aggregate_weighted` up to
+    f32 reassociation — the unit-testable core of the sharded round.
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    layout = ShardLayout(int(w.shape[0]), num_shards)
+    starts = layout.starts
+    wtot = jnp.maximum(w.sum(), 1e-9)
+
+    def leaf(x):
+        parts = []
+        for i in range(num_shards):
+            lo, hi = int(starts[i]), int(starts[i + 1])
+            wb = w[lo:hi].reshape((-1,) + (1,) * (x.ndim - 1))
+            parts.append((x[lo:hi] * wb).sum(0))
+        root = parts[0]
+        for p in parts[1:]:
+            root = root + p
+        return root / wtot
+
+    return jax.tree_util.tree_map(leaf, stacked)
+
+
+def make_root_fn(specs, omc: OMCConfig, sim: SimConfig):
+    """Jitted root combine: ``(storage, wsum_tree, wtot) -> new storage``.
+
+    Normalizes the accumulated partial sums into the cohort mean and
+    applies the same server step as the flat engine
+    (:func:`repro.federated.engine.apply_server_step`: interpolation with
+    ``sim.server_lr`` + policy re-compress) — one requantization per round,
+    matching the flat paths' error profile.
+    """
+
+    @jax.jit
+    def root_fn(storage, wsum, wtot):
+        server_f32 = decompress_tree(storage)
+        mean = jax.tree_util.tree_map(
+            lambda p: p / jnp.maximum(wtot, 1e-9), wsum
+        )
+        return engine.apply_server_step(server_f32, mean, specs, omc,
+                                        sim.server_lr)
+
+    return root_fn
+
+
+def _add_trees(a, b):
+    if a is None:
+        return b
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def run_round_sharded(
+    family,
+    cfg,
+    specs,
+    omc: OMCConfig,
+    sim: SimConfig,
+    server_params,  # storage tree (CompressedVariable | f32)
+    data_fn,
+    plan: cohort_lib.CohortPlan,
+    layout: ShardLayout,
+    round_index: int,
+    key: jax.Array,
+    *,
+    capacity: Optional[int] = None,
+    stream_fn=None,
+    root_fn=None,
+    strategy=None,
+    ste: bool = False,
+    fused_agg: bool = False,
+    store: Optional[PopulationStore] = None,
+    wire_table: Optional[accounting.WireTable] = None,
+    ledger: Optional[accounting.StreamLedger] = None,
+    on_chunk: Optional[Callable[[int, int, int], None]] = None,
+) -> Tuple[Any, Dict[str, float]]:
+    """One tree-aggregated round over a sharded population.
+
+    Samples the identical cohort the flat engine would (homogeneous
+    :func:`repro.federated.cohort.sample_cohort` + ``survival_mask`` under
+    the same key), groups members by their owning shard, streams each
+    shard's members through the fixed-capacity program in
+    ``capacity``-sized chunks, and root-combines the shard partials.
+    Returns ``(new server storage, metrics)`` with the engine's metric
+    schema plus ``shards`` / ``chunks`` / ``stream_capacity``.
+
+    ``store`` supplies per-client state: error-feedback residual rows are
+    gathered per chunk and scattered back alive-masked (compressed at rest
+    when the store packs them), and participation counters advance.
+    ``ledger`` (a :class:`repro.federated.accounting.StreamLedger`) asserts
+    the bounded-memory contract; ``on_chunk(shard, n_real, chunk_index)``
+    is an instrumentation hook (the population benchmark samples live
+    device bytes from it).
+    """
+    takes_ef = simulate.ef_lib.takes_residual(omc, strategy)
+    if plan.num_clients != layout.num_clients:
+        raise ValueError(
+            f"plan covers {plan.num_clients} clients but the layout shards "
+            f"{layout.num_clients}"
+        )
+    if takes_ef and (store is None or not store.has_ef):
+        raise ValueError(
+            f"strategy {strategy.label!r} uses error feedback: pass a "
+            f"PopulationStore with init_ef() applied (DESIGN.md §14)"
+        )
+    if capacity is None:
+        capacity = min(plan.cohort_size, 64)
+    if stream_fn is None:
+        stream_fn = make_stream_fn(family, cfg, specs, omc, sim, data_fn,
+                                   capacity, strategy=strategy, ste=ste,
+                                   fused_agg=fused_agg)
+    if root_fn is None:
+        root_fn = make_root_fn(specs, omc, sim)
+
+    ids = cohort_lib.sample_cohort(key, plan, round_index)
+    alive = cohort_lib.survival_mask(key, plan, round_index)
+    ids_np = np.asarray(ids, np.int64)
+    alive_np = np.asarray(alive, bool)
+    shard_of = layout.shard_of(ids_np)
+
+    wsum = None
+    wtot = jnp.float32(0.0)
+    loss_wsum = jnp.float32(0.0)
+    n_chunks = 0
+    shards_used = 0
+    r = jnp.int32(round_index)
+    for shard in range(layout.num_shards):
+        pos = np.flatnonzero(shard_of == shard)
+        if pos.size == 0:
+            continue
+        shards_used += 1
+        for chunk_pos in iter_chunks(pos, capacity):
+            cids, w = pad_chunk(ids_np[chunk_pos], alive_np[chunk_pos],
+                                capacity)
+            n_real = int(chunk_pos.size)
+            if takes_ef:
+                rows = store.gather_ef(cids)
+                pw, pwt, pl, new_rows = stream_fn(
+                    server_params, jnp.asarray(cids), jnp.asarray(w), r, rows
+                )
+                real_rows = {
+                    k: v[:n_real] for k, v in new_rows.items()
+                }
+                store.scatter_ef(cids[:n_real], real_rows,
+                                 mask=alive_np[chunk_pos])
+            else:
+                pw, pwt, pl = stream_fn(
+                    server_params, jnp.asarray(cids), jnp.asarray(w), r
+                )
+            wsum = _add_trees(wsum, pw)
+            wtot = wtot + pwt
+            loss_wsum = loss_wsum + pl
+            n_chunks += 1
+            if ledger is not None:
+                ledger.on_chunk(n_real)
+            if on_chunk is not None:
+                on_chunk(shard, n_real, n_chunks)
+
+    new_storage = root_fn(server_params, wsum, wtot)
+    n_alive = int(alive_np.sum())
+    loss = float(loss_wsum / jnp.maximum(wtot, 1.0))
+    if store is not None:
+        store.note_round(ids_np, alive_np)
+    metrics: Dict[str, Any] = dict(
+        loss=loss,
+        cohort=n_alive,
+        dropped=int(plan.cohort_size - n_alive),
+        shards=shards_used,
+        chunks=n_chunks,
+        stream_capacity=int(capacity),
+    )
+    if wire_table is not None:
+        metrics.update(
+            engine.round_wire_metrics(wire_table, omc, [omc], [ids], alive,
+                                      round_index, strategy=strategy)
+        )
+    return new_storage, metrics
+
+
+def run_training_sharded(
+    family,
+    cfg,
+    omc: OMCConfig,
+    sim: SimConfig,
+    plan: cohort_lib.CohortPlan,
+    layout: ShardLayout,
+    data_fn,
+    init_key,
+    num_rounds: int,
+    *,
+    capacity: Optional[int] = None,
+    strategy=None,
+    ste: bool = False,
+    fused_agg: bool = False,
+    store: Optional[PopulationStore] = None,
+    wire: bool = True,
+    init_params=None,
+    log: Optional[Callable[[str], None]] = None,
+) -> Tuple[Any, List[Dict[str, Any]], Optional[accounting.StreamLedger]]:
+    """Sharded mirror of :func:`repro.federated.engine.run_training_vectorized`.
+
+    Builds the stream/root programs once, derives the round key with the
+    same ``fold_in(init_key, 0xC047)`` as both flat training loops (so all
+    paths sample identical cohorts from one seed), and returns
+    ``(final storage, history, ledger)``.  A ``store`` is allocated
+    automatically when the strategy needs error feedback (f32-at-rest, the
+    equivalence mode); pass one explicitly to choose packed-at-rest rows
+    or to keep counters across calls.
+    """
+    specs = family.param_specs(cfg)
+    params = family.init(init_key, cfg) if init_params is None else init_params
+    storage = compress_params(params, specs, omc) if omc.enabled else params
+    if capacity is None:
+        capacity = min(plan.cohort_size, 64)
+    takes_ef = simulate.ef_lib.takes_residual(omc, strategy)
+    if takes_ef and store is None:
+        store = PopulationStore(layout)
+        store.init_ef(params, specs, omc)
+    stream_fn = make_stream_fn(family, cfg, specs, omc, sim, data_fn,
+                               capacity, strategy=strategy, ste=ste,
+                               fused_agg=fused_agg)
+    root_fn = make_root_fn(specs, omc, sim)
+    table = accounting.build_wire_table(params, specs, omc) if wire else None
+    ledger = (
+        accounting.StreamLedger(table, omc, capacity)
+        if table is not None else None
+    )
+    key = jax.random.fold_in(init_key, 0xC047)
+    history: List[Dict[str, Any]] = []
+    for r in range(num_rounds):
+        storage, metrics = run_round_sharded(
+            family, cfg, specs, omc, sim, storage, data_fn, plan, layout,
+            r, key, capacity=capacity, stream_fn=stream_fn, root_fn=root_fn,
+            strategy=strategy, ste=ste, fused_agg=fused_agg, store=store,
+            wire_table=table, ledger=ledger,
+        )
+        history.append(dict(round=r, **metrics))
+        if log and ((r + 1) % 10 == 0 or r == 0):
+            log(f"round {r + 1}/{num_rounds}: " +
+                ", ".join(f"{k}={v:.4g}" if isinstance(v, float)
+                          else f"{k}={v}" for k, v in metrics.items()))
+    return storage, history, ledger

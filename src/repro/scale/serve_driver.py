@@ -1,0 +1,109 @@
+"""Serve-side scale driver: hot-swap under sustained query traffic (§14).
+
+The "millions of users" half of the scale story: while the sharded runtime
+lands training rounds, the serving fleet must keep answering queries and
+ingest each new round's payload *without* recompiling or pausing.
+:func:`run_serve_under_swap` drives a
+:class:`repro.api.session.ServeSession` with a synthetic query stream,
+periodically hot-swapping freshly-produced payloads, and measures what a
+deployment cares about:
+
+  * steady-state query latency (p50/p95 over the whole run),
+  * swap wall time (payload decode + new storage materialized),
+  * **swap stall** — the latency of the first query after each swap
+    relative to the steady-state median (the jitted serve fns are reused
+    across swaps, so this should be ~1x; a recompile would show up as a
+    massive ratio, which the benchmark asserts against).
+
+Used by ``benchmarks/population_scale.py`` (committed artifact) and the
+``examples/population_scale.py`` CLI.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Iterable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _percentile(xs: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
+
+
+def synthetic_token_batch(batch: int, prefill_len: int, vocab: int,
+                          seed: int = 0) -> Dict[str, jax.Array]:
+    """Deterministic token-model query batch (transformer-family inputs)."""
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(0, vocab, size=(batch, prefill_len))
+    return dict(tokens=jnp.asarray(toks, jnp.int32))
+
+
+def run_serve_under_swap(
+    session,
+    payloads: Iterable[bytes],
+    *,
+    make_query: Callable[[int], Dict[str, jax.Array]],
+    queries_per_swap: int = 8,
+    batch: int = 1,
+    max_len: int = 32,
+    decode_steps: int = 4,
+    warmup_queries: int = 2,
+) -> Dict[str, Any]:
+    """Interleave query traffic with payload hot-swaps; return latency stats.
+
+    ``payloads`` is the stream of wire payloads training produces (full or
+    delta — :meth:`~repro.api.session.ServeSession.hot_swap` handles both);
+    between consecutive swaps the driver issues ``queries_per_swap``
+    generate calls built by ``make_query(query_index)``.  Every latency is
+    wall time to *materialized tokens* (``block_until_ready``), so jit
+    cache hits and misses are both visible.
+    """
+    if queries_per_swap < 1:
+        raise ValueError(
+            f"queries_per_swap must be >= 1, got {queries_per_swap}"
+        )
+    q_ms: List[float] = []
+    first_after_swap_ms: List[float] = []
+    qi = 0
+
+    def one_query(record: Optional[List[float]] = None) -> float:
+        nonlocal qi
+        cache = session.init_cache(batch, max_len)
+        t0 = time.perf_counter()
+        _, toks = session.generate(make_query(qi), cache, decode_steps)
+        toks.block_until_ready()
+        ms = (time.perf_counter() - t0) * 1e3
+        qi += 1
+        if record is not None:
+            record.append(ms)
+        return ms
+
+    for _ in range(max(warmup_queries, 1)):  # compile prefill/decode once
+        one_query()
+
+    swaps_before = session.swaps
+    for payload in payloads:
+        for _ in range(queries_per_swap - 1):
+            one_query(q_ms)
+        session.hot_swap(payload)
+        first_after_swap_ms.append(one_query(q_ms))
+
+    p50 = _percentile(q_ms, 50)
+    stats = session.serve_stats()
+    return dict(
+        queries=len(q_ms),
+        swaps=int(session.swaps - swaps_before),
+        query_ms_p50=p50,
+        query_ms_p95=_percentile(q_ms, 95),
+        swap_ms_mean=stats["swap_ms_mean"],
+        swap_ms_max=stats["swap_ms_max"],
+        first_query_after_swap_ms_p50=_percentile(first_after_swap_ms, 50),
+        # swap stall: post-swap first-query latency vs steady-state median —
+        # ~1x when the compiled serve fns survive the swap (they must)
+        swap_stall_ratio=(
+            _percentile(first_after_swap_ms, 50) / p50 if p50 > 0 else 0.0
+        ),
+    )

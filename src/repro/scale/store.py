@@ -1,0 +1,375 @@
+"""Sharded population state, compressed at rest (DESIGN.md §14).
+
+Everything the server holds *per client* — error-feedback residuals
+(:mod:`repro.compress.feedback`), round counters, trace event counters —
+lives here as one :class:`PopulationStore`, partitioned into contiguous
+client-id shards by a :class:`ShardLayout`.  The layout is *logical*: it
+defines which shard owns which client rows, independently of how many
+devices exist.  When a ``launch/mesh`` population mesh is available,
+:meth:`PopulationStore.device_ef` places rows across it with the
+spec-driven ``NamedSharding`` from :func:`repro.launch.specs.population_sharding`;
+on a single CPU the same layout drives the host-side shard grouping of
+:mod:`repro.scale.hierarchy`.
+
+The memory story is the paper's online-compression storage model applied
+to *server-held client state*: residual rows can be kept as OMC minifloat
+bitstreams (``core.packing`` words + one PVT ``(s, b)`` pair per client
+row) instead of f32, so a 100k–1M-client population's residual state
+shrinks by the same ~bits/32 factor as the model itself.  ``ef_fmt=None``
+keeps rows f32 (bit-exact with the engines' dense EF state — the
+equivalence-gate mode); a :class:`~repro.core.formats.FloatFormat` packs
+rows at rest at the cost of one extra quantization step per scatter
+(bounded, tested in ``tests/test_scale.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import packing
+from repro.core.formats import FloatFormat, decode, encode, value_quantize
+from repro.core.omc import OMCConfig
+from repro.core.pvt import pvt_apply, pvt_solve_fast
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardLayout:
+    """Contiguous balanced partition of ``num_clients`` into ``num_shards``.
+
+    Shard ``i`` owns the id block ``[starts[i], starts[i+1])``; the first
+    ``num_clients % num_shards`` shards are one client larger.  Contiguous
+    blocks keep every per-shard gather a slice (no permutation indices to
+    store) and make the layout describable by two integers — which is what
+    the checkpoint stamp (:func:`repro.checkpoint.save_population_state`)
+    records and refuses to silently reshape across.
+    """
+
+    num_clients: int
+    num_shards: int
+
+    def __post_init__(self):
+        if not 1 <= self.num_shards <= self.num_clients:
+            raise ValueError(
+                f"num_shards must satisfy 1 <= num_shards <= "
+                f"{self.num_clients}, got {self.num_shards}"
+            )
+
+    @property
+    def shard_sizes(self) -> Tuple[int, ...]:
+        base, rem = divmod(self.num_clients, self.num_shards)
+        return tuple(base + (1 if i < rem else 0)
+                     for i in range(self.num_shards))
+
+    @property
+    def starts(self) -> np.ndarray:
+        """int64[num_shards + 1]: shard i owns [starts[i], starts[i+1])."""
+        return np.concatenate(
+            [[0], np.cumsum(self.shard_sizes)]
+        ).astype(np.int64)
+
+    def shard_of(self, client_ids) -> np.ndarray:
+        """int64[...]: owning shard per client id (vectorized)."""
+        ids = np.asarray(client_ids, np.int64)
+        if ids.size and (ids.min() < 0 or ids.max() >= self.num_clients):
+            raise ValueError(
+                f"client ids must be in [0, {self.num_clients}), got range "
+                f"[{ids.min()}, {ids.max()}]"
+            )
+        return np.searchsorted(self.starts, ids, side="right") - 1
+
+    def clients_of(self, shard: int) -> np.ndarray:
+        s = self.starts
+        return np.arange(s[shard], s[shard + 1], dtype=np.int64)
+
+    def describe(self) -> Dict[str, int]:
+        """The checkpoint-stamped identity of this layout."""
+        return dict(num_clients=int(self.num_clients),
+                    num_shards=int(self.num_shards))
+
+
+@dataclasses.dataclass
+class _EFVar:
+    """One selected variable's population residuals, f32 or packed at rest."""
+
+    name: str
+    shape: Tuple[int, ...]  # per-client row shape
+    raw: Optional[np.ndarray] = None  # f32 [N, *shape] (exact mode)
+    words: Optional[np.ndarray] = None  # uint32 [N, n_words] (packed mode)
+    s: Optional[np.ndarray] = None  # f32 [N] per-row PVT scale
+    b: Optional[np.ndarray] = None  # f32 [N] per-row PVT bias
+
+    @property
+    def n(self) -> int:
+        return int(np.prod(self.shape)) if self.shape else 1
+
+    def at_rest_bytes(self) -> int:
+        if self.raw is not None:
+            return int(self.raw.nbytes)
+        return int(self.words.nbytes + self.s.nbytes + self.b.nbytes)
+
+
+class PopulationStore:
+    """All server-held per-client state for one simulated population.
+
+    Counters are dense host arrays (8 B + 8 B per client); residual state is
+    optional and attached by :meth:`init_ef`.  The row API
+    (:meth:`gather_ef` / :meth:`scatter_ef`) is what the streaming round
+    program consumes — gathers decompress on the way out, scatters
+    re-compress on the way in, so rows only ever exist decompressed for the
+    cohort chunk currently in flight (bounded by the stream capacity, never
+    by the population).
+    """
+
+    def __init__(self, layout: ShardLayout):
+        self.layout = layout
+        n = layout.num_clients
+        # rounds started / trace events per client — the async runtime's
+        # dict counters, as arrays (ArrayCounters adapts them back)
+        self.round_counters = np.zeros((n,), np.int64)
+        self.event_counters = np.zeros((n,), np.int64)
+        self.ef_fmt: Optional[FloatFormat] = None
+        self._ef: Dict[str, _EFVar] = {}
+        self._codecs: Dict[str, Tuple[Any, Any]] = {}
+
+    # -- counters -----------------------------------------------------------
+
+    def round_view(self) -> "ArrayCounters":
+        return ArrayCounters(self.round_counters)
+
+    def event_view(self) -> "ArrayCounters":
+        return ArrayCounters(self.event_counters)
+
+    def note_round(self, client_ids, alive=None) -> None:
+        """Sync-path trace accounting: invited clients start a round;
+        survivors (``alive`` mask) complete an upload event."""
+        ids = np.asarray(client_ids, np.int64)
+        self.round_counters[ids] += 1
+        if alive is not None:
+            self.event_counters[ids[np.asarray(alive, bool)]] += 1
+
+    # -- error-feedback rows ------------------------------------------------
+
+    @property
+    def has_ef(self) -> bool:
+        return bool(self._ef)
+
+    @property
+    def ef_names(self) -> List[str]:
+        return list(self._ef)
+
+    def init_ef(self, params_f32, specs, omc: OMCConfig,
+                ef_fmt: Optional[FloatFormat] = None) -> None:
+        """Allocate zeroed residuals for every policy-selected variable.
+
+        Same canonical :func:`repro.federated.accounting.walk_selected`
+        order (and therefore the same dict keys) as
+        :func:`repro.compress.feedback.init_ef_state` — a store-backed run
+        and a dense-EF run index the identical state.  ``ef_fmt=None``
+        keeps rows f32; a format packs them at rest (zero encodes to zero
+        codes with ``s=1, b=0``, so a fresh store is exact either way).
+        """
+        from repro.federated import accounting
+
+        if isinstance(ef_fmt, str):
+            ef_fmt = FloatFormat.parse(ef_fmt)
+        self.ef_fmt = ef_fmt
+        sel, _ = accounting.walk_selected(params_f32, specs, omc)
+        n = self.layout.num_clients
+        self._ef = {}
+        for name, _, leaf in sel:
+            shape = tuple(leaf.shape)
+            var = _EFVar(name, shape)
+            if ef_fmt is None:
+                var.raw = np.zeros((n,) + shape, np.float32)
+            else:
+                nw = packing.packed_words(var.n, ef_fmt.bits)
+                var.words = np.zeros((n, nw), np.uint32)
+                var.s = np.ones((n,), np.float32)
+                var.b = np.zeros((n,), np.float32)
+            self._ef[name] = var
+        self._codecs = {}
+
+    def _codec(self, name: str):
+        """Jitted per-variable row codecs (cached; one trace per chunk width)."""
+        if name not in self._codecs:
+            var = self._ef[name]
+            fmt, n = self.ef_fmt, var.n
+
+            @jax.jit
+            def dec(words, s, b):
+                codes = jax.vmap(lambda w: packing.unpack(w, fmt.bits, n))(
+                    words
+                )
+                vals = pvt_apply(decode(codes.astype(fmt.container_dtype),
+                                        fmt), s[:, None], b[:, None])
+                return vals.reshape((-1,) + var.shape)
+
+            @jax.jit
+            def enc(rows):
+                flat = rows.reshape((rows.shape[0], n))
+                vq = value_quantize(flat, fmt)
+                s, b = pvt_solve_fast(flat, vq, 1)  # broadcastable [C, 1]
+                codes = encode(vq, fmt, quantize=False)
+                words = jax.vmap(lambda c: packing.pack(c, fmt.bits))(codes)
+                return words, s[:, 0], b[:, 0]
+
+            self._codecs[name] = (dec, enc)
+        return self._codecs[name]
+
+    def gather_ef(self, client_ids) -> Dict[str, jax.Array]:
+        """Decompressed residual rows ``{name: f32[C, *shape]}`` for a chunk."""
+        ids = np.asarray(client_ids, np.int64)
+        out = {}
+        for name, var in self._ef.items():
+            if var.raw is not None:
+                out[name] = jnp.asarray(var.raw[ids])
+            else:
+                dec, _ = self._codec(name)
+                out[name] = dec(jnp.asarray(var.words[ids]),
+                                jnp.asarray(var.s[ids]),
+                                jnp.asarray(var.b[ids]))
+        return out
+
+    def scatter_ef(self, client_ids, rows: Dict[str, jax.Array],
+                   mask=None) -> None:
+        """Write updated rows back (re-compressing in packed mode).
+
+        ``mask`` (bool[C]) keeps un-masked clients' previous residuals —
+        the alive-masked scatter the engines apply (a dead client never
+        uploaded, so its residual must not move).
+        """
+        ids = np.asarray(client_ids, np.int64)
+        keep = np.ones(ids.shape, bool) if mask is None else np.asarray(
+            mask, bool
+        )
+        ids = ids[keep]
+        if ids.size == 0:
+            return
+        for name, var in self._ef.items():
+            new = rows[name]
+            new = new[np.flatnonzero(keep)] if not keep.all() else new
+            if var.raw is not None:
+                var.raw[ids] = np.asarray(jax.device_get(new), np.float32)
+            else:
+                _, enc = self._codec(name)
+                words, s, b = enc(jnp.asarray(new))
+                var.words[ids] = np.asarray(jax.device_get(words))
+                var.s[ids] = np.asarray(jax.device_get(s))
+                var.b[ids] = np.asarray(jax.device_get(b))
+
+    def device_ef(self, mesh, client_ids=None) -> Dict[str, jax.Array]:
+        """Residual rows placed on a population mesh (``clients`` axis
+        partitioned via :func:`repro.launch.specs.population_sharding`)."""
+        from repro.launch import specs as launch_specs
+
+        rows = self.gather_ef(
+            np.arange(self.layout.num_clients) if client_ids is None
+            else client_ids
+        )
+        return {
+            k: jax.device_put(
+                v, launch_specs.population_sharding(mesh, v.ndim)
+            )
+            for k, v in rows.items()
+        }
+
+    # -- accounting / checkpointing -----------------------------------------
+
+    def bytes_report(self) -> Dict[str, Any]:
+        """Host bytes at rest vs the f32-dense baseline the engines hold."""
+        counter_bytes = int(self.round_counters.nbytes
+                            + self.event_counters.nbytes)
+        ef_rest = sum(v.at_rest_bytes() for v in self._ef.values())
+        ef_fp32 = sum(4 * self.layout.num_clients * v.n
+                      for v in self._ef.values())
+        total = counter_bytes + ef_rest
+        return dict(
+            num_clients=self.layout.num_clients,
+            num_shards=self.layout.num_shards,
+            counter_bytes=counter_bytes,
+            ef_at_rest_bytes=int(ef_rest),
+            ef_fp32_bytes=int(ef_fp32),
+            ef_fmt=self.ef_fmt.name if self.ef_fmt is not None else None,
+            total_bytes=int(total),
+            fp32_equivalent_bytes=int(counter_bytes + ef_fp32),
+        )
+
+    def describe_ef(self) -> Optional[Dict[str, Any]]:
+        if not self._ef:
+            return None
+        return dict(
+            fmt=self.ef_fmt.name if self.ef_fmt is not None else None,
+            vars={name: list(v.shape) for name, v in self._ef.items()},
+        )
+
+    def state_tree(self) -> Dict[str, Any]:
+        """Array state for :func:`repro.checkpoint.save_population_state`."""
+        ef: Dict[str, Any] = {}
+        for name, var in self._ef.items():
+            if var.raw is not None:
+                ef[name] = dict(raw=var.raw)
+            else:
+                ef[name] = dict(words=var.words, s=var.s, b=var.b)
+        return dict(round_counters=self.round_counters,
+                    event_counters=self.event_counters, ef=ef)
+
+    def load_state_tree(self, tree: Dict[str, Any]) -> None:
+        """Inverse of :meth:`state_tree` (layout already validated)."""
+        self.round_counters = np.asarray(
+            jax.device_get(tree["round_counters"]), np.int64
+        )
+        self.event_counters = np.asarray(
+            jax.device_get(tree["event_counters"]), np.int64
+        )
+        for name, var in self._ef.items():
+            entry = tree["ef"][name]
+            if var.raw is not None:
+                var.raw = np.asarray(jax.device_get(entry["raw"]), np.float32)
+            else:
+                var.words = np.asarray(jax.device_get(entry["words"]),
+                                       np.uint32)
+                var.s = np.asarray(jax.device_get(entry["s"]), np.float32)
+                var.b = np.asarray(jax.device_get(entry["b"]), np.float32)
+
+
+class ArrayCounters:
+    """Mutable-mapping view over a dense per-client counter array.
+
+    The async runtime (:class:`repro.federated.async_engine.AsyncRunner`)
+    keeps ``{client_id: int}`` counter dicts; at 1M clients two Python
+    dicts of boxed ints cost ~100 MB and serialize as multi-MB JSON.  This
+    adapter exposes a :class:`PopulationStore` counter array through the
+    same mapping surface (``c[cid]``, ``c[cid] = v``, ``.items()``), so the
+    runner's event loop is unchanged while the state lives in one numpy
+    array and checkpoints as such.
+    """
+
+    def __init__(self, arr: np.ndarray):
+        self.arr = arr
+
+    def __getitem__(self, cid) -> int:
+        return int(self.arr[cid])
+
+    def __setitem__(self, cid, value) -> None:
+        self.arr[cid] = int(value)
+
+    def __contains__(self, cid) -> bool:
+        return 0 <= int(cid) < len(self.arr)
+
+    def __len__(self) -> int:
+        return len(self.arr)
+
+    def __iter__(self):
+        return iter(range(len(self.arr)))
+
+    def get(self, cid, default=0) -> int:
+        return self[cid] if cid in self else default
+
+    def items(self):
+        for c in range(len(self.arr)):
+            yield c, int(self.arr[c])

@@ -1,0 +1,161 @@
+"""Fixed-capacity cohort streaming (DESIGN.md §14).
+
+The engine's round program materializes the whole cohort's stacked client
+models at once — ``client_chunk`` bounds the *training* working set via
+``lax.map``, but the program's inputs/outputs still scale with cohort size,
+so "cohort = the population" is out of reach.  This module generalizes
+that chunking across the program boundary: one compiled *partial-aggregate*
+program of fixed client width ``capacity`` is fed arbitrarily many chunks,
+each returning only the weighted **sums** (``Σ w·model``, ``Σ w``,
+``Σ w·loss``), which the caller accumulates.  Peak live bytes are then
+``O(capacity)`` per chunk plus one accumulator tree — independent of how
+many clients stream through (asserted by the
+:class:`repro.federated.accounting.StreamLedger` bound and measured in
+``benchmarks/population_scale.py``).
+
+Padding contract (same as the async runtime's padded train program): a
+short final chunk repeats a real client id in the pad lanes with weight 0;
+dead/pad rows are zeroed *before* the weighted sum, so a diverged dead
+client (NaN update) cannot poison the partials — exactly the sync engine's
+``finish`` guard.
+
+``fused_agg=True`` mirrors the fused engine's transport semantics (§13):
+each selected variable's chunk stack is transport-encoded
+(:func:`repro.federated.engine.transport_encode_stacked` — one RNE
+quantization of each upload) and decoded before entering the partial sum,
+so the streamed result carries the same one-quantization-step error profile
+as the fused flat round, while partials stay f32 (requantization happens
+once, at the root combine in :mod:`repro.scale.hierarchy`).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.omc import OMCConfig
+from repro.core.store import CompressedVariable, decompress_tree, is_compressed
+from repro.federated import engine, simulate
+from repro.federated.simulate import SimConfig
+from repro.federated.state import n_stack_axes
+from repro.models.common import ParamSpec
+
+
+def pad_chunk(client_ids, alive, capacity: int
+              ) -> Tuple[np.ndarray, np.ndarray]:
+    """Pad a (possibly short) chunk to the program's fixed width.
+
+    Returns ``(cids int32[capacity], w float32[capacity])``: pad lanes
+    repeat the chunk's first (real) client with weight 0 — they train
+    redundantly and contribute exactly nothing to the partial sums.
+    """
+    ids = np.asarray(client_ids, np.int64)
+    a = np.asarray(alive, bool)
+    if ids.size == 0 or ids.size > capacity:
+        raise ValueError(
+            f"chunk must hold 1..{capacity} clients, got {ids.size}"
+        )
+    pad = capacity - ids.size
+    cids = np.concatenate([ids, np.full((pad,), ids[0], np.int64)])
+    w = np.concatenate([a.astype(np.float32), np.zeros((pad,), np.float32)])
+    return cids.astype(np.int32), w
+
+
+def make_stream_fn(family, cfg, specs, omc: OMCConfig, sim: SimConfig,
+                   data_fn, capacity: int, *, strategy=None,
+                   ste: bool = False, fused_agg: bool = False,
+                   takes_residual: Optional[bool] = None):
+    """Build the compiled fixed-capacity partial-aggregate program.
+
+    Jitted ``(storage, cids[cap], w[cap], round_index) ->
+    (wsum_tree, wtot, loss_wsum)``; with error feedback
+    (``takes_residual``) a residual-rows dict rides as a fifth argument
+    and the updated rows come back as a fourth output (pad lanes recompute
+    a real client's rows — the caller scatters only real, alive lanes, via
+    :meth:`repro.scale.store.PopulationStore.scatter_ef`).
+
+    The client body is the same
+    :func:`repro.federated.simulate.make_client_fn` all three existing
+    paths run; ``data_fn`` must be traceable ("vmap" data mode — the
+    synthetic tasks and partitioned batch fns are).  One program instance
+    serves every chunk of every shard of every round — capacity is the
+    only shape.
+    """
+    if capacity < 1:
+        raise ValueError(f"capacity must be >= 1, got {capacity}")
+    if fused_agg and (strategy is not None or not omc.enabled):
+        raise ValueError(
+            "fused_agg=True needs OMC enabled and no zoo strategy "
+            "(DESIGN.md §13/§14)"
+        )
+    if takes_residual is None:
+        takes_residual = simulate.ef_lib.takes_residual(omc, strategy)
+    one = simulate.make_client_fn(family, cfg, specs, omc, sim, strategy,
+                                  ste, takes_residual=takes_residual)
+    steps = jnp.arange(sim.local_steps)
+
+    def partials(storage, stacked, losses, w):
+        mask = w > 0
+
+        def leaf(path, spec_t, srv, stack):
+            x = jnp.where(
+                mask.reshape((-1,) + (1,) * (stack.ndim - 1)), stack, 0.0
+            )
+            if fused_agg and is_compressed(srv):
+                # transport-encode each upload row (§13): the one RNE step
+                # the fused kernel's compressed-domain path applies
+                ba = n_stack_axes(spec_t, srv.codes)
+                codes, s, b = engine.transport_encode_stacked(
+                    x, srv.fmt, omc.pvt, ba
+                )
+                if not omc.pvt:
+                    s = s.reshape((-1,) + (1,) * (x.ndim - 1))
+                    b = b.reshape((-1,) + (1,) * (x.ndim - 1))
+                x = CompressedVariable(codes, s, b, srv.fmt).dequantize()
+            wb = w.reshape((-1,) + (1,) * (x.ndim - 1))
+            return (x * wb).sum(0)
+
+        wsum = jax.tree_util.tree_map_with_path(
+            leaf, specs, storage, stacked,
+            is_leaf=lambda s: isinstance(s, ParamSpec),
+        )
+        loss_wsum = (jnp.where(mask, losses, 0.0) * w).sum()
+        return wsum, w.sum(), loss_wsum
+
+    def train(storage, cids, round_index, ef_rows):
+        server_f32 = decompress_tree(storage)
+        batches = jax.vmap(
+            lambda c: jax.vmap(lambda s: data_fn(c, round_index, s))(steps)
+        )(cids)
+        if takes_residual:
+            return jax.vmap(
+                lambda b, c, e: one(server_f32, b, round_index, c, e)
+            )(batches, cids, ef_rows)
+        return jax.vmap(
+            lambda b, c: one(server_f32, b, round_index, c)
+        )(batches, cids)
+
+    if takes_residual:
+
+        @jax.jit
+        def stream_fn_ef(storage, cids, w, round_index, ef_rows):
+            models, losses, rows = train(storage, cids, round_index, ef_rows)
+            return partials(storage, models, losses, w) + (rows,)
+
+        return stream_fn_ef
+
+    @jax.jit
+    def stream_fn(storage, cids, w, round_index):
+        models, losses = train(storage, cids, round_index, None)
+        return partials(storage, models, losses, w)
+
+    return stream_fn
+
+
+def iter_chunks(positions: np.ndarray, capacity: int):
+    """Yield fixed-capacity slices of a shard's cohort positions."""
+    for i in range(0, len(positions), capacity):
+        yield positions[i:i + capacity]

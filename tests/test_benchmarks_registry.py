@@ -1,0 +1,73 @@
+"""benchmarks/run.py registry audit (ISSUE 9 satellite).
+
+Two invariants:
+  * every benchmark script on disk is registered in ``BENCHES`` (and vice
+    versa) — a bench that skips the registry silently falls out of
+    ``python -m benchmarks.run``,
+  * every *committed* ``experiments/bench/*.json`` artifact names a
+    registered generator in ``ARTIFACTS`` — a stale artifact nobody can
+    regenerate is worse than no artifact.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, REPO)
+
+from benchmarks.run import ARTIFACTS, BENCHES  # noqa: E402
+
+_NON_BENCH = {"run.py", "common.py", "__init__.py"}
+
+
+def _scripts_on_disk():
+    bench_dir = os.path.join(REPO, "benchmarks")
+    return {
+        f[:-3] for f in os.listdir(bench_dir)
+        if f.endswith(".py") and f not in _NON_BENCH
+    }
+
+
+def test_every_script_registered():
+    on_disk = _scripts_on_disk()
+    registered = set(BENCHES)
+    assert on_disk == registered, (
+        f"unregistered scripts: {sorted(on_disk - registered)}; "
+        f"registry entries without a script: {sorted(registered - on_disk)}"
+    )
+
+
+def test_registry_modules_resolve():
+    for name, module in BENCHES.items():
+        assert module == f"benchmarks.{name}"
+        path = os.path.join(REPO, *module.split(".")) + ".py"
+        assert os.path.exists(path), f"{name} -> missing {path}"
+
+
+def test_artifact_generators_registered():
+    for artifact, bench in ARTIFACTS.items():
+        assert bench in BENCHES, f"{artifact} names unknown bench {bench!r}"
+
+
+def test_committed_artifacts_have_generators():
+    """git-tracked experiments/bench JSONs must each name a generator."""
+    try:
+        out = subprocess.run(
+            ["git", "ls-files", "experiments/bench"],
+            cwd=REPO, capture_output=True, text=True, timeout=30,
+        )
+    except (OSError, subprocess.TimeoutExpired):
+        pytest.skip("git unavailable")
+    if out.returncode != 0:
+        pytest.skip("not a git checkout")
+    committed = {
+        os.path.basename(p) for p in out.stdout.split()
+        if p.endswith(".json")
+    }
+    missing = committed - set(ARTIFACTS)
+    assert not missing, (
+        f"committed artifacts with no registered generator: {sorted(missing)}"
+    )

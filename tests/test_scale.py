@@ -1,0 +1,368 @@
+"""Sharded population runtime (DESIGN.md §14, ISSUE 9).
+
+Gates, in dependency order:
+  * ShardLayout partition math,
+  * PopulationStore EF rows: raw (exact) and packed-at-rest roundtrips,
+  * tree_aggregate == aggregate_weighted (the tree algebra alone),
+  * padding/capacity invariance of the streamed round,
+  * **tier-1 equivalence**: the sharded round reproduces the flat engine
+    (unfused and fused) within one quantization step with byte-exact wire
+    ledgers,
+  * StreamLedger's capacity-determined peak bound,
+  * population checkpoints: layout stamp + cross-layout refusal,
+  * AsyncRunner backed by a PopulationStore.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.compress import get_strategy
+from repro.core.omc import OMCConfig
+from repro.core.store import decompress_tree
+from repro.data.synthetic import make_frame_task
+from repro.federated import accounting, engine, simulate
+from repro.federated.async_engine import AsyncConfig, AsyncRunner
+from repro.federated.cohort import CohortPlan, aggregate_weighted
+from repro.federated.traces import FixedTrace
+from repro.models import conformer as cf
+from repro.scale import (
+    ArrayCounters,
+    PopulationStore,
+    ShardLayout,
+    pad_chunk,
+    run_training_sharded,
+    tree_aggregate,
+)
+
+CFG = cf.ConformerConfig(
+    n_layers=2, d_model=32, n_heads=4, d_ff=64, n_classes=16, d_in=8
+)
+OMC = OMCConfig.parse("S1E3M7")
+PLAN = CohortPlan(num_clients=16, cohort_size=8, failure_rate=0.25)
+TASK = make_frame_task(d_in=CFG.d_in, n_classes=CFG.n_classes, seq_len=24,
+                       num_clients=PLAN.num_clients)
+DATA_FN = lambda c, r, s: TASK.batch(c, r, s, 4)
+SIM = simulate.SimConfig(local_steps=2, client_lr=0.1)
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# ShardLayout
+# ---------------------------------------------------------------------------
+
+
+def test_shard_layout_partition():
+    lay = ShardLayout(10, 3)
+    assert lay.shard_sizes == (4, 3, 3)
+    assert list(lay.starts) == [0, 4, 7, 10]
+    assert list(lay.shard_of([0, 3, 4, 6, 7, 9])) == [0, 0, 1, 1, 2, 2]
+    # clients_of tiles the id space exactly once
+    all_ids = np.concatenate([lay.clients_of(i) for i in range(3)])
+    assert list(all_ids) == list(range(10))
+    assert lay.describe() == dict(num_clients=10, num_shards=3)
+
+
+def test_shard_layout_validation():
+    with pytest.raises(ValueError):
+        ShardLayout(4, 5)  # more shards than clients
+    with pytest.raises(ValueError):
+        ShardLayout(4, 0)
+    with pytest.raises(ValueError):
+        ShardLayout(4, 2).shard_of([4])  # id out of range
+
+
+def test_pad_chunk_contract():
+    cids, w = pad_chunk([5, 6], [True, False], 4)
+    assert list(cids) == [5, 6, 5, 5]  # pads repeat the first real client
+    assert list(w) == [1.0, 0.0, 0.0, 0.0]  # dead + pad lanes weigh 0
+    with pytest.raises(ValueError):
+        pad_chunk([], [], 4)
+    with pytest.raises(ValueError):
+        pad_chunk([1, 2, 3], [1, 1, 1], 2)
+
+
+# ---------------------------------------------------------------------------
+# PopulationStore EF rows
+# ---------------------------------------------------------------------------
+
+
+def _fresh_store(n=8, shards=2, ef_fmt=None):
+    store = PopulationStore(ShardLayout(n, shards))
+    params = cf.init(KEY, CFG)
+    store.init_ef(params, cf.param_specs(CFG), OMC, ef_fmt=ef_fmt)
+    return store, params
+
+
+def test_store_ef_raw_roundtrip_exact():
+    store, _ = _fresh_store(ef_fmt=None)
+    rows = store.gather_ef([1, 3])
+    rng = np.random.default_rng(0)
+    new = {k: jnp.asarray(rng.standard_normal(v.shape), jnp.float32)
+           for k, v in rows.items()}
+    store.scatter_ef([1, 3], new)
+    back = store.gather_ef([1, 3])
+    for k in new:
+        np.testing.assert_array_equal(np.asarray(back[k]),
+                                      np.asarray(new[k]))
+    # untouched clients stay zero
+    for v in store.gather_ef([0]).values():
+        assert np.all(np.asarray(v) == 0.0)
+
+
+def test_store_ef_packed_roundtrip_bounded():
+    store, _ = _fresh_store(ef_fmt="S1E4M14")
+    rows = store.gather_ef([0, 5])
+    for v in rows.values():  # fresh packed rows decode to exact zero
+        assert np.all(np.asarray(v) == 0.0)
+    rng = np.random.default_rng(1)
+    new = {k: jnp.asarray(0.1 * rng.standard_normal(v.shape), jnp.float32)
+           for k, v in rows.items()}
+    store.scatter_ef([0, 5], new)
+    back = store.gather_ef([0, 5])
+    for k in new:
+        d = np.abs(np.asarray(back[k]) - np.asarray(new[k]))
+        # one 19-bit PVT quantization step on values in ~[-0.5, 0.5]
+        assert d.max() <= 1e-4, (k, d.max())
+    rep = store.bytes_report()
+    assert rep["ef_at_rest_bytes"] < rep["ef_fp32_bytes"]
+    assert rep["ef_fmt"] == "S1E4M14"
+
+
+def test_store_scatter_alive_mask():
+    store, _ = _fresh_store()
+    rows = store.gather_ef([2, 4])
+    new = {k: jnp.ones_like(v) for k, v in rows.items()}
+    store.scatter_ef([2, 4], new, mask=[True, False])
+    after = store.gather_ef([2, 4])
+    for v in after.values():
+        assert np.all(np.asarray(v)[0] == 1.0)  # alive row moved
+        assert np.all(np.asarray(v)[1] == 0.0)  # dead row kept
+
+
+def test_store_counters_and_views():
+    store = PopulationStore(ShardLayout(6, 2))
+    store.note_round([0, 1, 2], alive=[True, False, True])
+    assert list(store.round_counters[:3]) == [1, 1, 1]
+    assert list(store.event_counters[:3]) == [1, 0, 1]
+    view = store.event_view()
+    assert isinstance(view, ArrayCounters)
+    view[5] = 7
+    assert store.event_counters[5] == 7
+    assert view.get(5) == 7 and view.get(99, -1) == -1
+    assert dict(view.items())[5] == 7
+    assert len(view) == 6
+
+
+# ---------------------------------------------------------------------------
+# Tree-aggregation algebra
+# ---------------------------------------------------------------------------
+
+
+def test_tree_aggregate_matches_flat():
+    rng = np.random.default_rng(2)
+    stacked = dict(
+        a=jnp.asarray(rng.standard_normal((10, 4, 3)), jnp.float32),
+        b=jnp.asarray(rng.standard_normal((10, 5)), jnp.float32),
+    )
+    w = jnp.asarray(rng.random(10), jnp.float32)
+    flat = aggregate_weighted(stacked, w)
+    for shards in (1, 2, 3, 10):
+        treed = tree_aggregate(stacked, w, shards)
+        for k in stacked:
+            d = np.abs(np.asarray(flat[k]) - np.asarray(treed[k]))
+            assert d.max() <= 1e-6, (shards, k, d.max())
+
+
+# ---------------------------------------------------------------------------
+# Tier-1 equivalence gate: sharded round == flat engine round
+# ---------------------------------------------------------------------------
+
+
+def _engine_run(num_rounds=2, **kw):
+    return engine.run_training_vectorized(
+        cf, CFG, OMC, SIM, engine.CohortSpec(PLAN), DATA_FN, KEY,
+        num_rounds=num_rounds, **kw,
+    )
+
+
+def _sharded_run(num_rounds=2, shards=2, capacity=3, **kw):
+    return run_training_sharded(
+        cf, CFG, OMC, SIM, PLAN, ShardLayout(PLAN.num_clients, shards),
+        DATA_FN, KEY, num_rounds, capacity=capacity, **kw,
+    )
+
+
+def _assert_trees_close(a_storage, b_storage, max_tol, mean_tol):
+    a = decompress_tree(a_storage)
+    b = decompress_tree(b_storage)
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        d = np.abs(np.asarray(x) - np.asarray(y))
+        assert d.max() <= max_tol, d.max()
+        assert d.mean() <= mean_tol, d.mean()
+
+
+def test_sharded_matches_engine_unfused():
+    """Cohort of 8 with failures + PPQ across 2 shards and capacity-3
+    chunks: identical cohort semantics, byte-exact wire ledger, server
+    trees within the engine-vs-loop tolerance (f32 reassociation only)."""
+    eng_storage, eng_hist = _engine_run()
+    sh_storage, sh_hist, ledger = _sharded_run()
+    for eh, sh in zip(eng_hist, sh_hist):
+        assert eh["cohort"] == sh["cohort"]
+        assert eh["dropped"] == sh["dropped"]
+        assert eh["down_bytes"] == sh["down_bytes"]  # byte-exact
+        assert eh["up_bytes"] == sh["up_bytes"]
+        assert abs(eh["loss"] - sh["loss"]) < 1e-3
+        assert sh["shards"] >= 1 and sh["chunks"] >= sh["shards"]
+    _assert_trees_close(eng_storage, sh_storage, 6e-3, 1e-4)
+    assert ledger.clients_streamed == sum(h["cohort"] + h["dropped"]
+                                          for h in sh_hist)
+
+
+def test_sharded_matches_engine_fused():
+    """fused_agg: one transport RNE per upload (the §13 profile), still
+    byte-exact ledgers and one-quant-step server trees."""
+    eng_storage, eng_hist = _engine_run(fused_agg=True)
+    sh_storage, sh_hist, _ = _sharded_run(fused_agg=True)
+    for eh, sh in zip(eng_hist, sh_hist):
+        assert eh["down_bytes"] == sh["down_bytes"]
+        assert eh["up_bytes"] == sh["up_bytes"]
+    _assert_trees_close(eng_storage, sh_storage, 6e-3, 1e-3)
+
+
+def test_sharded_capacity_invariance():
+    """The streamed result must not depend on how the cohort is chunked:
+    capacity 2 / 5 / cohort-size all land on the same server tree."""
+    base, _, _ = _sharded_run(num_rounds=1, capacity=8)
+    for cap in (2, 5):
+        other, _, _ = _sharded_run(num_rounds=1, capacity=cap)
+        _assert_trees_close(base, other, 1e-6, 1e-7)
+
+
+def test_sharded_shard_count_invariance():
+    one, _, _ = _sharded_run(num_rounds=1, shards=1)
+    many, _, _ = _sharded_run(num_rounds=1, shards=8)
+    _assert_trees_close(one, many, 1e-6, 1e-7)
+
+
+def test_sharded_ef_strategy_matches_engine():
+    """Store-backed error feedback (topk strategy) reproduces the engine's
+    dense-EF run; the store's counters advance."""
+    strat = get_strategy("topk", density=0.25)
+    eng_storage, _ = _engine_run(strategy=strat, wire=False)
+    store = PopulationStore(ShardLayout(PLAN.num_clients, 2))
+    params = cf.init(KEY, CFG)
+    store.init_ef(params, cf.param_specs(CFG), OMC)
+    sh_storage, _, _ = _sharded_run(strategy=strat, wire=False, store=store)
+    _assert_trees_close(eng_storage, sh_storage, 1e-5, 1e-6)
+    assert store.round_counters.sum() == 2 * PLAN.cohort_size
+    assert 0 < store.event_counters.sum() <= store.round_counters.sum()
+
+
+def test_stream_ledger_bound_capacity_determined():
+    """peak_bound_bytes is a function of capacity alone — identical across
+    population sizes — and on_chunk validates the capacity contract."""
+    params = cf.init(KEY, CFG)
+    table = accounting.build_wire_table(params, cf.param_specs(CFG), OMC)
+    bounds = {
+        n: accounting.StreamLedger(table, OMC, 16).peak_bound_bytes()
+        for n in (1_000, 100_000)
+    }
+    assert len(set(bounds.values())) == 1
+    small = accounting.StreamLedger(table, OMC, 4)
+    assert small.peak_bound_bytes() < accounting.StreamLedger(
+        table, OMC, 64
+    ).peak_bound_bytes()
+    small.on_chunk(4)
+    with pytest.raises(ValueError):
+        small.on_chunk(5)
+    snap = small.snapshot()
+    assert snap["chunks"] == 1 and snap["clients_streamed"] == 4
+
+
+# ---------------------------------------------------------------------------
+# Checkpointing: layout stamp + refusal
+# ---------------------------------------------------------------------------
+
+
+def test_population_checkpoint_roundtrip_and_refusal(tmp_path):
+    store, params = _fresh_store(ef_fmt="S1E4M14")
+    rows = store.gather_ef([1])
+    store.scatter_ef([1], {k: jnp.ones_like(v) for k, v in rows.items()})
+    store.note_round([0, 1], alive=[True, True])
+    path = ckpt.save_population_state(str(tmp_path), 3, store)
+    with open(os.path.join(path, "manifest.json")) as f:
+        extra = json.load(f)["extra"]
+    assert extra["kind"] == "population_store"
+    assert extra["layout"] == store.layout.describe()
+    assert extra["ef"]["fmt"] == "S1E4M14"
+
+    fresh, _ = _fresh_store(ef_fmt="S1E4M14")
+    ckpt.restore_population_state(path, fresh)
+    assert list(fresh.round_counters) == list(store.round_counters)
+    for k, v in fresh.gather_ef([1]).items():
+        d = np.abs(np.asarray(v) - 1.0)
+        assert d.max() <= 1e-4, (k, d.max())
+
+    wrong_layout = PopulationStore(ShardLayout(8, 4))
+    wrong_layout.init_ef(params, cf.param_specs(CFG), OMC,
+                         ef_fmt="S1E4M14")
+    with pytest.raises(ValueError, match="layout"):
+        ckpt.restore_population_state(path, wrong_layout)
+
+    wrong_fmt, _ = _fresh_store(ef_fmt=None)
+    with pytest.raises(ValueError, match="EF"):
+        ckpt.restore_population_state(path, wrong_fmt)
+
+
+# ---------------------------------------------------------------------------
+# Async runtime over a PopulationStore
+# ---------------------------------------------------------------------------
+
+
+def _async_runner(population=None, num_clients=8):
+    task = make_frame_task(d_in=CFG.d_in, n_classes=CFG.n_classes,
+                           seq_len=24, num_clients=num_clients)
+    return AsyncRunner(
+        cf, CFG, OMC, SIM, AsyncConfig(buffer_goal=4), FixedTrace(),
+        num_clients=num_clients, data_fn=lambda c, r, s: task.batch(c, r, s, 4),
+        init_key=KEY, population=population,
+    )
+
+
+def test_async_runner_population_backed(tmp_path):
+    """Counters live in the store's arrays; checkpoints stamp the layout
+    and refuse a cross-layout (or dict-backed) restore."""
+    store = PopulationStore(ShardLayout(8, 2))
+    r1 = _async_runner(population=store)
+    r1.run_until(flushes=2)
+    assert store.round_counters.sum() > 0  # event loop wrote through
+    assert isinstance(r1.event_counters, ArrayCounters)
+
+    path = ckpt.save_async_state(str(tmp_path), r1, keep=1)
+    with open(os.path.join(path, "manifest.json")) as f:
+        extra = json.load(f)["extra"]
+    assert extra["population_layout"] == dict(num_clients=8, num_shards=2)
+    assert extra["event_counters"] is None  # arrays, not JSON dicts
+
+    store2 = PopulationStore(ShardLayout(8, 2))
+    r2 = _async_runner(population=store2)
+    ckpt.restore_async_state(path, r2)
+    assert list(store2.round_counters) == list(store.round_counters)
+    assert r2.version == r1.version
+
+    r3 = _async_runner(population=PopulationStore(ShardLayout(8, 4)))
+    with pytest.raises(ValueError, match="layout"):
+        ckpt.restore_async_state(path, r3)
+    with pytest.raises(ValueError, match="layout"):
+        ckpt.restore_async_state(path, _async_runner())  # dict-backed
+
+    with pytest.raises(ValueError, match="num_clients"):
+        _async_runner(population=store, num_clients=12)
