@@ -48,6 +48,7 @@ from repro.data.synthetic import make_frame_task
 from repro.federated import async_engine, engine, simulate, traces
 from repro.federated.cohort import CohortPlan
 from repro.models import conformer as cf
+from repro.obs import Obs, null_span
 
 CFG = cf.ConformerConfig(
     n_layers=2, d_model=32, n_heads=4, d_ff=64, n_classes=16, d_in=8
@@ -61,9 +62,14 @@ def _median(xs):
 
 
 def bench(cohort: int, buffer_goal: int, rounds: int, batch: int, seq: int,
-          alpha: float, fmt: str, seed: int) -> dict:
+          alpha: float, fmt: str, seed: int, obs=None) -> dict:
     """One comparison row: the whole population participates in both paths;
-    sync invites everyone each round, async buffers K uploads."""
+    sync invites everyone each round, async buffers K uploads.
+
+    ``obs`` (DESIGN.md §15) traces the run: wall spans per sync round and
+    async flush segment, virtual-clock spans per async client round, and
+    per-flush metric bundles — exported by the caller via ``obs.flush()``.
+    """
     omc = OMCConfig.parse(fmt)
     sim = simulate.SimConfig(local_steps=1, client_lr=0.1)
     task = make_frame_task(d_in=CFG.d_in, n_classes=CFG.n_classes,
@@ -85,7 +91,7 @@ def bench(cohort: int, buffer_goal: int, rounds: int, batch: int, seq: int,
     runner = async_engine.AsyncRunner(
         cf, CFG, omc, sim,
         async_engine.AsyncConfig(buffer_goal=buffer_goal, decay=0.5),
-        trace, num_clients=cohort, data_fn=data_fn, init_key=key,
+        trace, num_clients=cohort, data_fn=data_fn, init_key=key, obs=obs,
     )
     # warm-up (compile) both paths, untimed; the warm-up round trains from
     # the initial model, so its loss is the init-quality baseline both
@@ -109,10 +115,11 @@ def bench(cohort: int, buffer_goal: int, rounds: int, batch: int, seq: int,
     while r <= rounds or runner.completed < budget:
         if r <= rounds:
             t0 = time.perf_counter()
-            sync_storage, sync_metrics = engine.run_round_vectorized(
-                cf, CFG, specs, omc, sim, sync_storage, data_fn, spec, r,
-                rkey, round_fn=round_fn, wire_table=table,
-            )
+            with null_span(obs, "sync_round", round=r):
+                sync_storage, sync_metrics = engine.run_round_vectorized(
+                    cf, CFG, specs, omc, sim, sync_storage, data_fn, spec,
+                    r, rkey, round_fn=round_fn, wire_table=table,
+                )
             sync_t.append(time.perf_counter() - t0)
         if runner.completed < budget:
             t0 = time.perf_counter()
@@ -138,7 +145,8 @@ def bench(cohort: int, buffer_goal: int, rounds: int, batch: int, seq: int,
                          np.arange(cohort, dtype=np.int32)).sum())
                      for rr in range(1, rounds + 1)))
     async_loss = runner.history[-1]["loss"]
-    async_wire = runner.stats.down_bytes + runner.stats.up_bytes
+    snap = runner.stats.snapshot()  # stable derived keys (DESIGN.md §15)
+    async_wire = snap["down_bytes"] + snap["up_bytes"]
     mb = 1024.0 * 1024.0
 
     return dict(
@@ -161,22 +169,25 @@ def bench(cohort: int, buffer_goal: int, rounds: int, batch: int, seq: int,
         sync_quality_per_mb=round((init_loss - sync_loss) / (sync_wire / mb), 5),
         async_quality_per_mb=round(
             (init_loss - async_loss) / (async_wire / mb), 5),
-        async_stale_frac=round(
-            runner.stats.stale_up_bytes / max(runner.stats.up_bytes, 1), 4),
-        peak_in_flight_mb=round(runner.stats.peak_in_flight_bytes / mb, 3),
+        async_stale_fraction=round(snap["stale_fraction"], 4),
+        async_dropped_fraction=round(snap["dropped_fraction"], 4),
+        peak_in_flight_mb=round(snap["peak_in_flight_bytes"] / mb, 3),
     )
 
 
 def run(cohort=64, buffer_goal=16, rounds=5, batch=1, seq=8, alpha=1.5,
-        fmt="S1E3M7", seed=0, smoke=False):
+        fmt="S1E3M7", seed=0, smoke=False, trace=False):
     rounds = max(1, min(rounds, int(os.environ.get("BENCH_ROUNDS", rounds))))
-    row = bench(cohort, buffer_goal, rounds, batch, seq, alpha, fmt, seed)
+    obs = Obs(run_name="async_scale") if trace else None
+    row = bench(cohort, buffer_goal, rounds, batch, seq, alpha, fmt, seed,
+                obs=obs)
     print_table(
         "Async vs sync under Pareto stragglers (virtual + wall clock)",
         [row],
         ["cohort", "buffer_goal", "sync_updates_per_vs",
          "async_updates_per_vs", "vtime_speedup", "sync_wall_s_per_round",
-         "async_wall_s_per_flush", "async_stale_frac"],
+         "async_wall_s_per_flush", "async_stale_fraction",
+         "async_dropped_fraction", "peak_in_flight_mb"],
     )
     print_table(
         "Quality per wire byte at matched update budget",
@@ -189,6 +200,9 @@ def run(cohort=64, buffer_goal=16, rounds=5, batch=1, seq=8, alpha=1.5,
         rows=[row],
     ))
     print(f"wrote {path}")
+    if obs is not None:
+        paths = obs.flush()
+        print(f"wrote {paths['jsonl']} and {paths['perfetto']}")
     # acceptance gate: non-barrier aggregation must beat the straggler
     # barrier by >= 2x in completed updates per virtual second
     assert row["vtime_speedup"] >= 2.0, row
@@ -208,6 +222,9 @@ def main(argv=None) -> int:
                     help="Pareto tail index (smaller = heavier stragglers)")
     ap.add_argument("--fmt", default="S1E3M7")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", action="store_true",
+                    help="record obs telemetry (JSONL + Perfetto under "
+                         "experiments/obs/)")
     args = ap.parse_args(argv)
     if args.smoke:
         cohort, buffer_goal, rounds = 8, 4, args.rounds or 3
@@ -216,7 +233,7 @@ def main(argv=None) -> int:
         rounds = args.rounds or 5
     run(cohort=cohort, buffer_goal=buffer_goal, rounds=rounds,
         batch=args.batch, seq=args.seq, alpha=args.alpha, fmt=args.fmt,
-        seed=args.seed, smoke=args.smoke)
+        seed=args.seed, smoke=args.smoke, trace=args.trace)
     return 0
 
 

@@ -49,6 +49,7 @@ from repro.data.synthetic import make_frame_task
 from repro.federated import accounting, engine, simulate
 from repro.federated.cohort import CohortPlan
 from repro.models import conformer as cf
+from repro.obs import Obs
 
 CFG = cf.ConformerConfig(
     n_layers=2, d_model=32, n_heads=4, d_ff=64, n_classes=16, d_in=8
@@ -167,8 +168,66 @@ def bench_tiers(cohort: int, rounds: int, batch: int, seq: int,
     )
 
 
+def bench_obs_overhead(cohort: int, rounds: int, batch: int, seq: int,
+                       fmt: str, seed: int) -> dict:
+    """Wall cost of enabling telemetry on the vectorized engine.
+
+    Times identical engine rounds with ``obs=None`` against rounds with a
+    live :class:`repro.obs.Obs` handle (metric bundles + spans), rounds
+    interleaved so host noise hits both equally.  The §15 budget is
+    <= 5% median overhead at cohort 64: the compiled program only gains
+    one already-computed output (the cohort mean), and bundle norms are
+    small host-side reductions.  The obs handle is never flushed — this
+    measures recording cost, not file I/O.
+    """
+    omc = OMCConfig.parse(fmt)
+    sim = simulate.SimConfig(local_steps=1, client_lr=0.1)
+    plan, data_fn = _setup(cohort, batch, seq)
+    specs = cf.param_specs(CFG)
+    key = jax.random.PRNGKey(seed)
+    params = cf.init(key, CFG)
+    storage0 = engine.compress_params(params, specs, omc)
+    table = accounting.build_wire_table(params, specs, omc)
+    rkey = jax.random.fold_in(key, 0xC047)
+    spec = engine.CohortSpec(plan)
+    obs = Obs(run_name="cohort_overhead")
+
+    fn_off = engine.make_round_fn(cf, CFG, specs, omc, sim, spec, data_fn)
+    fn_on = engine.make_round_fn(cf, CFG, specs, omc, sim, spec, data_fn,
+                                 collect_metrics=True)
+    # compile both variants (round 0, untimed)
+    engine.run_round_vectorized(cf, CFG, specs, omc, sim, storage0, data_fn,
+                                spec, 0, rkey, round_fn=fn_off)
+    engine.run_round_vectorized(cf, CFG, specs, omc, sim, storage0, data_fn,
+                                spec, 0, rkey, round_fn=fn_on, obs=obs)
+
+    off_t, on_t = [], []
+    off_storage = on_storage = storage0
+    for r in range(1, rounds + 1):
+        t0 = time.perf_counter()
+        off_storage, _ = engine.run_round_vectorized(
+            cf, CFG, specs, omc, sim, off_storage, data_fn, spec, r, rkey,
+            round_fn=fn_off, wire_table=table,
+        )
+        off_t.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        on_storage, _ = engine.run_round_vectorized(
+            cf, CFG, specs, omc, sim, on_storage, data_fn, spec, r, rkey,
+            round_fn=fn_on, wire_table=table, obs=obs,
+        )
+        on_t.append(time.perf_counter() - t0)
+    off_s, on_s = _median(off_t), _median(on_t)
+    return dict(
+        cohort=cohort,
+        obs_off_s_per_round=round(off_s, 4),
+        obs_on_s_per_round=round(on_s, 4),
+        overhead_pct=round(100.0 * (on_s / off_s - 1.0), 2),
+        records=len(obs.sink.records()),
+    )
+
+
 def run(cohorts=(4, 16, 64), rounds=5, batch=1, seq=8, fmt="S1E3M7",
-        seed=0, tiers=None, smoke=False):
+        seed=0, tiers=None, smoke=False, obs_overhead=False):
     # suite budget knob (DESIGN.md §8): a reduced BENCH_ROUNDS caps the
     # timed rounds too, so `BENCH_ROUNDS=2 python -m benchmarks.run` shrinks
     # this benchmark along with the others; cohort sizes / batch / seq have
@@ -188,6 +247,12 @@ def run(cohorts=(4, 16, 64), rounds=5, batch=1, seq=8, fmt="S1E3M7",
         print_table("Mixed-bitwidth cohort (engine only)", [hrow],
                     ["cohort", "tiers", "vec_s_per_round", "up_bytes"])
         payload["hetero"] = hrow
+    if obs_overhead:
+        orow = bench_obs_overhead(max(cohorts), rounds, batch, seq, fmt, seed)
+        print_table("Telemetry overhead (engine, obs on vs off)", [orow],
+                    ["cohort", "obs_off_s_per_round", "obs_on_s_per_round",
+                     "overhead_pct", "records"])
+        payload["obs_overhead"] = orow
     path = save_result("cohort_scale", payload)
     print(f"wrote {path}")
     assert all(r["wire_match"] and r["codec_match"] for r in rows), rows
@@ -208,6 +273,9 @@ def main(argv=None) -> int:
     ap.add_argument("--tiers", default=None,
                     help="comma-separated profile names for a hetero row, "
                          "e.g. s1e3m7,s1e4m3,f32")
+    ap.add_argument("--obs-overhead", action="store_true",
+                    help="also time engine rounds with telemetry enabled "
+                         "at the largest cohort (DESIGN.md §15 <=5% budget)")
     args = ap.parse_args(argv)
     if args.smoke:
         cohorts = (4, 8)
@@ -217,7 +285,8 @@ def main(argv=None) -> int:
         rounds = args.rounds or 5
     tiers = args.tiers.split(",") if args.tiers else None
     run(cohorts=cohorts, rounds=rounds, batch=args.batch, seq=args.seq,
-        fmt=args.fmt, seed=args.seed, tiers=tiers, smoke=args.smoke)
+        fmt=args.fmt, seed=args.seed, tiers=tiers, smoke=args.smoke,
+        obs_overhead=args.obs_overhead)
     return 0
 
 

@@ -31,6 +31,9 @@ from repro.federated.state import state_bytes_report
 from repro.models import transformer as tr
 from repro.models.common import IDENTITY_MAT
 
+from repro.obs import Obs
+from repro.obs.log import Logger
+
 from .codecs import payload_bytes_report
 from .session import FLClient, FLSession, ServeSession
 
@@ -47,8 +50,16 @@ def main(argv=None) -> int:
     ap.add_argument("--client-lr", type=float, default=0.05)
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress stderr text (structured records still "
+                         "flow to --obs)")
+    ap.add_argument("--obs", action="store_true",
+                    help="record telemetry (obs JSONL + Perfetto trace "
+                         "under experiments/obs/)")
     args = ap.parse_args(argv)
     rounds = args.rounds or (2 if args.smoke else 8)
+    obs = Obs(run_name="api_demo") if args.obs else None
+    log = Logger(quiet=args.quiet, obs=obs)
 
     if args.smoke:
         cfg = tr.TransformerConfig(n_layers=2, d_model=64, n_heads=4,
@@ -85,7 +96,7 @@ def main(argv=None) -> int:
         return trained
 
     plan = CohortPlan(num_clients=args.clients, cohort_size=args.cohort)
-    server = FLSession(tr, cfg, omc, plan=plan, seed=args.seed)
+    server = FLSession(tr, cfg, omc, plan=plan, seed=args.seed, obs=obs)
     clients = {
         cid: FLClient(cid, tr, cfg, omc, train_fn)
         for cid in range(args.clients)
@@ -104,12 +115,17 @@ def main(argv=None) -> int:
     assert abs(wire["wire_bytes"] - theory["packed_bytes"]) <= (
         0.01 * theory["packed_bytes"]
     ), (wire, theory)
-    print(f"model: {wire['num_params'] / 1e6:.2f} M params, fmt {omc.fmt.name}")
-    print(f"wire body (codec):        {wire['wire_bytes']:>9d} B "
-          f"({wire['wire_ratio']:.1%} of f32)")
-    print(f"state_bytes_report packed: {state_rep['packed_bytes']:>8d} B (exact)")
-    print(f"tree_bytes_report packed:  {theory['packed_bytes']:>8d} B "
-          f"({theory['packed_ratio']:.1%} of f32)")
+    log.info(f"model: {wire['num_params'] / 1e6:.2f} M params, "
+             f"fmt {omc.fmt.name}",
+             params_m=wire["num_params"] / 1e6, fmt=omc.fmt.name)
+    log.info(f"wire body (codec):        {wire['wire_bytes']:>9d} B "
+             f"({wire['wire_ratio']:.1%} of f32)",
+             wire_bytes=wire["wire_bytes"], wire_ratio=wire["wire_ratio"])
+    log.info(f"state_bytes_report packed: {state_rep['packed_bytes']:>8d} B "
+             f"(exact)", packed_bytes=state_rep["packed_bytes"])
+    log.info(f"tree_bytes_report packed:  {theory['packed_bytes']:>8d} B "
+             f"({theory['packed_ratio']:.1%} of f32)",
+             theory_bytes=theory["packed_bytes"])
 
     serve = None
     for r in range(rounds):
@@ -129,17 +145,22 @@ def main(argv=None) -> int:
         fp32 = wire["fp32_bytes"]
         mean_loss = sum(losses[c] for c in ticket.client_ids) / len(ticket.client_ids)
         mean_down = sum(down_b) // len(down_b)
-        print(f"round {m['round']}: loss={mean_loss:.4f} "
-              f"reports={m['reports']}/{m['invited']} "
-              f"down={mean_down}B/client ({mean_down / fp32:.1%} of f32, "
-              f"{n_delta}/{len(down_b)} delta) "
-              f"up={sum(up_bytes) // len(up_bytes)}B/client")
+        log.info(f"round {m['round']}: loss={mean_loss:.4f} "
+                 f"reports={m['reports']}/{m['invited']} "
+                 f"down={mean_down}B/client ({mean_down / fp32:.1%} of f32, "
+                 f"{n_delta}/{len(down_b)} delta) "
+                 f"up={sum(up_bytes) // len(up_bytes)}B/client",
+                 round=m["round"], loss=mean_loss, reports=m["reports"],
+                 down_bytes=mean_down,
+                 up_bytes=sum(up_bytes) // len(up_bytes))
 
     t = server.traffic
     down_ratio = t["down_bytes"] / max(t["down_fp32_bytes"], 1)
     up_ratio = t["up_bytes"] / max(t["up_fp32_bytes"], 1)
-    print(f"totals: down {t['down_bytes']}B ({down_ratio:.1%} of f32), "
-          f"up {t['up_bytes']}B ({up_ratio:.1%} of f32)")
+    log.result(f"totals: down {t['down_bytes']}B ({down_ratio:.1%} of f32), "
+               f"up {t['up_bytes']}B ({up_ratio:.1%} of f32)",
+               down_bytes=t["down_bytes"], up_bytes=t["up_bytes"],
+               down_ratio=down_ratio, up_ratio=up_ratio)
 
     # serve over the wire: hot-swap the final round's delta payload into the
     # session snapshotted before that round, then generate on the new weights
@@ -147,16 +168,18 @@ def main(argv=None) -> int:
     cache = serve.init_cache(2, 64)
     toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
     _, gen = serve.generate(dict(tokens=toks), cache, 8)
-    print(f"serve: hot-swapped round-{info.round_index} payload "
-          f"({info.total_bytes}B, delta={info.is_delta}); generated "
-          f"{gen.shape[1]} tokens/seq over compressed weights")
+    log.info(f"serve: hot-swapped round-{info.round_index} payload "
+             f"({info.total_bytes}B, delta={info.is_delta}); generated "
+             f"{gen.shape[1]} tokens/seq over compressed weights",
+             swap_round=info.round_index, swap_bytes=info.total_bytes,
+             generated=int(gen.shape[1]))
 
     ok = down_ratio <= 0.60
     enforced = omc.fmt.name == "S1E3M7"
-    print(f"payload check: download {down_ratio:.1%} of f32 "
-          f"({'<=' if ok else '>'} 60% target; "
-          f"{'enforced for' if enforced else 'informational for'} "
-          f"{omc.fmt.name})")
+    log.result(f"payload check: download {down_ratio:.1%} of f32 "
+               f"({'<=' if ok else '>'} 60% target; "
+               f"{'enforced for' if enforced else 'informational for'} "
+               f"{omc.fmt.name})", ok=ok, enforced=enforced)
     if args.smoke:
         # CI artifact (benchmarks/README.md): the smoke run's traffic record
         out_dir = os.path.join(os.path.dirname(__file__), "..", "..", "..",
@@ -170,7 +193,10 @@ def main(argv=None) -> int:
                            wire_bytes=wire["wire_bytes"],
                            fp32_bytes=wire["fp32_bytes"],
                            **{k: int(v) for k, v in t.items()}), f, indent=1)
-        print(f"wrote {os.path.normpath(path)}")
+        log.info(f"wrote {os.path.normpath(path)}", path=os.path.normpath(path))
+    if obs is not None:
+        paths = obs.flush()
+        log.info(f"wrote {paths['jsonl']} and {paths['perfetto']}", **paths)
     if not ok and enforced:
         return 1
     return 0

@@ -30,6 +30,7 @@ from repro.federated import cohort as cohort_lib
 from repro.federated.async_engine import flush_weights
 from repro.federated.round import make_serve_fns
 from repro.federated.state import compress_params, state_bytes_report
+from repro.obs import null_span
 
 from . import codecs
 
@@ -162,12 +163,16 @@ class FLSession:
         init_params=None,
         profile_fn: Optional[Callable[[int], str]] = None,
         strategy=None,
+        obs=None,
     ):
         self.family = family
         self.cfg = cfg
         self.omc = omc
         self.plan = plan
         self.strategy = _resolve_strategy(strategy)
+        # telemetry (DESIGN.md §15): payload encode/decode + flush spans;
+        # obs=None records nothing and changes nothing
+        self.obs = obs
         # client id -> device-profile name (engine.PROFILES keys); stamped
         # onto every RoundTicket so transports know each client's tier
         self.profile_fn = profile_fn
@@ -193,9 +198,12 @@ class FLSession:
     def server_payload(self, *, delta: bool = False) -> bytes:
         """Wire payload of the current server model (optionally vs round-1)."""
         base = self._prev_storage if delta else None
-        return codecs.encode_payload(
-            self.storage, base=base, round_index=self.round_index
-        )
+        with null_span(self.obs, "encode_payload", delta=delta) as a:
+            blob = codecs.encode_payload(
+                self.storage, base=base, round_index=self.round_index
+            )
+            a["bytes"] = len(blob)
+        return blob
 
     def begin_round(self) -> RoundTicket:
         """Sample the round's cohort and build its download payload(s)."""
@@ -234,7 +242,9 @@ class FLSession:
             raise RuntimeError("no open round; call begin_round() first")
         if client_id not in self._ticket.client_ids:
             raise KeyError(f"client {client_id} is not in this round's cohort")
-        tree, info = codecs.decode_payload(blob, base=self.storage)
+        with null_span(self.obs, "decode_payload", client=client_id,
+                       bytes=len(blob)):
+            tree, info = codecs.decode_payload(blob, base=self.storage)
         self._reports[client_id] = _reported_model(
             tree, self.storage, self.strategy
         )
@@ -357,7 +367,9 @@ class FLSession:
         if ticket is None:
             raise KeyError(f"client {client_id} has no open ticket")
         base = self._version_storages[ticket.server_version]
-        tree, info = codecs.decode_payload(blob, base=base)
+        with null_span(self.obs, "decode_payload", client=client_id,
+                       bytes=len(blob)):
+            tree, info = codecs.decode_payload(blob, base=base)
         self._async_buffer.append(
             (client_id, ticket.server_version,
              _reported_model(tree, base, self.strategy))
@@ -371,6 +383,11 @@ class FLSession:
         return info
 
     def _flush_async(self) -> None:
+        with null_span(self.obs, "flush",
+                       version=getattr(self, "server_version", 0)):
+            self._flush_async_inner()
+
+    def _flush_async_inner(self) -> None:
         entries = self._async_buffer[: self.async_cfg["buffer_goal"]]
         self._async_buffer = self._async_buffer[self.async_cfg["buffer_goal"]:]
         staleness = jnp.asarray(
@@ -498,10 +515,12 @@ class ServeSession:
     touching the compiled functions (same treedef/shapes/dtypes).
     """
 
-    def __init__(self, family, cfg, storage, compute_dtype=jnp.float32):
+    def __init__(self, family, cfg, storage, compute_dtype=jnp.float32,
+                 obs=None):
         self.family = family
         self.cfg = cfg
         self.storage = storage
+        self.obs = obs
         prefill_fn, decode_fn = make_serve_fns(family, cfg, compute_dtype)
         self._prefill = jax.jit(prefill_fn)
         self._decode = jax.jit(decode_fn)
@@ -524,11 +543,15 @@ class ServeSession:
         import time
 
         t0 = time.perf_counter()
-        self.storage, info = codecs.decode_payload(payload, base=self.storage)
-        jax.block_until_ready(
-            [l for l in jax.tree_util.tree_leaves(self.storage)
-             if hasattr(l, "block_until_ready")]
-        )
+        with null_span(self.obs, "hot_swap", swap=int(self.swaps),
+                       bytes=len(payload)):
+            self.storage, info = codecs.decode_payload(
+                payload, base=self.storage
+            )
+            jax.block_until_ready(
+                [l for l in jax.tree_util.tree_leaves(self.storage)
+                 if hasattr(l, "block_until_ready")]
+            )
         self.swaps += 1
         self.swap_ms.append((time.perf_counter() - t0) * 1e3)
         return info

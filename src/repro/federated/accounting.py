@@ -335,6 +335,17 @@ class AsyncWireStats:
         return up
 
     def snapshot(self) -> dict:
+        """Point-in-time ledger state with stable derived keys.
+
+        ``stale_fraction`` is the share of *accepted* upload bytes that
+        arrived stale; ``dropped_fraction`` the share of all finished
+        upload bytes that were discarded past ``max_staleness``.  Both are
+        0.0 before any upload finishes.  These keys (plus
+        ``peak_in_flight_bytes``) are the stable surface
+        ``benchmarks/async_scale.py`` and the obs report read —
+        renaming them is a schema break (DESIGN.md §15).
+        """
+        finished = self.up_bytes + self.dropped_up_bytes
         return dict(
             down_bytes=int(self.down_bytes),
             up_bytes=int(self.up_bytes),
@@ -346,6 +357,13 @@ class AsyncWireStats:
             n_uploads=int(self.n_uploads),
             n_stale=int(self.n_stale),
             n_dropped=int(self.n_dropped),
+            stale_fraction=(
+                float(self.stale_up_bytes / self.up_bytes)
+                if self.up_bytes else 0.0
+            ),
+            dropped_fraction=(
+                float(self.dropped_up_bytes / finished) if finished else 0.0
+            ),
         )
 
 

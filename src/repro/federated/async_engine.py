@@ -65,6 +65,8 @@ from repro.core.omc import OMCConfig
 from repro.core.store import CompressedVariable, decompress_tree, is_compressed
 from repro.kernels import ops as kernel_ops
 from repro.models.common import ParamSpec
+from repro.obs import metrics as obs_metrics
+from repro.obs import null_span
 
 from . import accounting
 from . import cohort as cohort_lib
@@ -231,7 +233,8 @@ def make_batch_train_fn(family, cfg, specs, omc: OMCConfig, sim: SimConfig,
     return batch_fn
 
 
-def make_flush_fn(specs, omc: OMCConfig, sim: SimConfig, buffer_goal: int):
+def make_flush_fn(specs, omc: OMCConfig, sim: SimConfig, buffer_goal: int,
+                  collect_metrics: bool = False):
     """Jitted ``(storage, stacked[K,...], weights[K]) -> new storage``.
 
     Staleness-weighted FedBuff step: weighted mean over the buffer
@@ -239,6 +242,13 @@ def make_flush_fn(specs, omc: OMCConfig, sim: SimConfig, buffer_goal: int):
     same aggregation op as both sync paths), server interpolation with
     ``sim.server_lr``, re-compress.  With unit weights this is bit-for-bit
     the sync engine's ``finish`` on an all-alive cohort of size K.
+
+    ``collect_metrics=True`` (DESIGN.md §15) returns
+    ``(new_storage, mean_model)`` — the buffer mean the flush already
+    computes, exposed so the runtime can assemble the metric bundle
+    eagerly on the host; no metric math runs inside the program, so the
+    storage result is bit-identical either way (tier-1 gated in
+    tests/test_obs.py).
     """
     del buffer_goal  # shape is carried by the traced arguments
 
@@ -250,13 +260,18 @@ def make_flush_fn(specs, omc: OMCConfig, sim: SimConfig, buffer_goal: int):
             lambda old, new: old + sim.server_lr * (new - old),
             server_f32, mean_model,
         )
-        return compress_params(new_f32, specs, omc) if omc.enabled else new_f32
+        new_storage = (
+            compress_params(new_f32, specs, omc) if omc.enabled else new_f32
+        )
+        if collect_metrics:
+            return new_storage, mean_model
+        return new_storage
 
     return flush_fn
 
 
 def make_fused_flush_fn(specs, omc: OMCConfig, sim: SimConfig,
-                        buffer_goal: int):
+                        buffer_goal: int, collect_metrics: bool = False):
     """Compressed-domain flush (DESIGN.md §13): jitted
     ``(storage, stacked compressed entries[K, ...], weights[K]) -> storage``.
 
@@ -282,10 +297,15 @@ def make_fused_flush_fn(specs, omc: OMCConfig, sim: SimConfig,
             mean = cohort_lib.aggregate_weighted(stk, weights)
             return srv + sim.server_lr * (mean - srv)
 
-        return jax.tree_util.tree_map_with_path(
+        new_storage = jax.tree_util.tree_map_with_path(
             f, specs, storage, stacked,
             is_leaf=lambda s: isinstance(s, ParamSpec),
         )
+        if collect_metrics:
+            # no f32 buffer mean exists in the compressed domain — the
+            # host-side bundle degrades to the update norm (DESIGN.md §15)
+            return new_storage, None
+        return new_storage
 
     return flush_fn
 
@@ -349,6 +369,7 @@ class AsyncRunner:
         ste: bool = False,
         fused_agg: bool = False,
         population=None,
+        obs=None,
     ):
         if init_key is None and init_params is None:
             raise ValueError("need init_key or init_params")
@@ -390,6 +411,10 @@ class AsyncRunner:
             family, cfg, self.specs, omc, sim, data_fn, acfg.capacity,
             strategy=strategy, ste=ste, takes_residual=takes_ef,
         )
+        # telemetry handle (DESIGN.md §15): obs=None is a strict no-op —
+        # same flush program, no spans, no records (tier-1 gated)
+        self.obs = obs
+        collect = obs is not None and obs.collect_metrics
         # fused mode (§13): buffer entries live transport-encoded and the
         # flush aggregates in the compressed domain
         self.fused_agg = bool(fused_agg)
@@ -398,10 +423,13 @@ class AsyncRunner:
                 lambda m: compress_params(m, self.specs, omc, fast=True)
             ))
             self._flush_fn = make_fused_flush_fn(self.specs, omc, sim,
-                                                 acfg.buffer_goal)
+                                                 acfg.buffer_goal,
+                                                 collect_metrics=collect)
         else:
             self._flush_fn = make_flush_fn(self.specs, omc, sim,
-                                           acfg.buffer_goal)
+                                           acfg.buffer_goal,
+                                           collect_metrics=collect)
+        self._collect_metrics = collect
         self.stats = (
             accounting.AsyncWireStats(
                 accounting.build_wire_table(params, self.specs, omc),
@@ -497,6 +525,11 @@ class AsyncRunner:
         heapq.heappush(self._heap, (t + latency, _PRIO_UPLOAD, cid))
         if self.stats is not None:
             self.stats.start_round(self.omc, rnd, cid)
+        if self.obs is not None:
+            # virtual-clock span (§15): the event loop knows both endpoints
+            # at check-in, so the span is constructed, never timed
+            self.obs.vspan("client_round", t, latency,
+                           client=cid, version=base, round=rnd)
         return dict(event="checkin", client=cid, t=t, version=base,
                     round=rnd, latency=latency)
 
@@ -549,9 +582,11 @@ class AsyncRunner:
                 rnds = jnp.asarray([r for _, r in padded], jnp.int32)
                 if self.ef is not None:
                     rows = {k: v[cids] for k, v in self.ef.items()}
-                    models, losses, new_rows = self._batch_fn(
-                        storage, cids, rnds, rows
-                    )
+                    with null_span(self.obs, "dispatch", version=base,
+                                   lanes=len(chunk)):
+                        models, losses, new_rows = self._batch_fn(
+                            storage, cids, rnds, rows
+                        )
                     # scatter only the real lanes back — pad lanes duplicate
                     # chunk[-1] and must not double-apply its residual
                     real_ids = jnp.asarray([c for c, _ in chunk], jnp.int32)
@@ -560,7 +595,9 @@ class AsyncRunner:
                             new_rows[k][:len(chunk)]
                         )
                 else:
-                    models, losses = self._batch_fn(storage, cids, rnds)
+                    with null_span(self.obs, "dispatch", version=base,
+                                   lanes=len(chunk)):
+                        models, losses = self._batch_fn(storage, cids, rnds)
                 if self.fused_agg:
                     # transport-encode every lane (§13): the cached upload —
                     # and later the buffer — holds codes, not f32 trees
@@ -590,7 +627,23 @@ class AsyncRunner:
         stacked = jax.tree_util.tree_map(
             lambda *xs: jnp.stack(xs), *[e.model for e in entries]
         )
-        self.storage = self._flush_fn(self.storage, stacked, w)
+        bundle = None
+        with null_span(self.obs, "flush", version=self.version,
+                       buffer=len(entries)):
+            if self._collect_metrics:
+                old_storage = self.storage
+                self.storage, mean_model = self._flush_fn(
+                    self.storage, stacked, w
+                )
+                # bundle assembled eagerly AFTER the compiled flush
+                # (DESIGN.md §15) — the program never computes metric
+                # values, so obs cannot perturb the trained storage
+                bundle = obs_metrics.server_round_bundle(
+                    self.specs, old_storage, self.storage,
+                    mean_model, self.sim.server_lr,
+                )
+            else:
+                self.storage = self._flush_fn(self.storage, stacked, w)
         self.version += 1
         rec = dict(
             version=self.version,
@@ -605,6 +658,11 @@ class AsyncRunner:
         if self.stats is not None:
             rec.update(self.stats.snapshot())
         self.history.append(rec)
+        if self.obs is not None:
+            self.obs.record(
+                "flush", bundle,
+                staleness=[float(s) for s in staleness], **rec,
+            )
         self._gc_versions()
 
     # -- driving ------------------------------------------------------------
@@ -641,6 +699,7 @@ def run_async_training(
     flushes: int, wire: bool = True,
     log: Optional[Callable[[str], None]] = None,
     strategy=None, ste: bool = False, fused_agg: bool = False,
+    obs=None,
 ) -> Tuple[Any, List[Dict[str, Any]], AsyncRunner]:
     """Async mirror of :func:`repro.federated.engine.run_training_vectorized`.
 
@@ -654,7 +713,7 @@ def run_async_training(
     runner = AsyncRunner(
         family, cfg, omc, sim, acfg, trace, num_clients=num_clients,
         data_fn=data_fn, init_key=init_key, wire=wire,
-        strategy=strategy, ste=ste, fused_agg=fused_agg,
+        strategy=strategy, ste=ste, fused_agg=fused_agg, obs=obs,
     )
     for i in range(flushes):
         runner.run_until(flushes=1)

@@ -68,6 +68,8 @@ from repro.core.store import CompressedVariable, compress_variable, \
     decompress_tree, is_compressed
 from repro.kernels import ops as kernel_ops
 from repro.models.common import ParamSpec
+from repro.obs import metrics as obs_metrics
+from repro.obs import null_span
 
 from . import accounting
 from . import cohort as cohort_lib
@@ -360,6 +362,7 @@ def make_round_fn(
     strategy=None,
     ste: bool = False,
     fused_agg: bool = False,
+    collect_metrics: bool = False,
 ):
     """Build the engine's compiled round.
 
@@ -395,6 +398,15 @@ def make_round_fn(
     :func:`fused_aggregation_supported`; results match the unfused path
     within one quantization step with byte-identical wire ledgers
     (gated in tests/test_engine.py).
+
+    ``collect_metrics=True`` appends the cohort mean the round already
+    computes as the program's **final** output (``None`` on the fused
+    path, where no f32 mean exists); :func:`run_round_vectorized` builds
+    the metric bundle (DESIGN.md §15) eagerly on the host from that mean
+    plus the round's outputs, so the compiled round math is identical
+    with metrics on or off — main outputs stay bit-identical (gated in
+    tests/test_obs.py).  Off by default so the program signature is
+    unchanged for every existing caller.
     """
     if data_mode not in ("vmap", "host"):
         raise ValueError(f"data_mode must be 'vmap' or 'host', got {data_mode!r}")
@@ -420,7 +432,12 @@ def make_round_fn(
                                         sim.server_lr)
         n_alive = w.sum()
         loss = (loss_c * w).sum() / jnp.maximum(n_alive, 1.0)
-        return new_storage, loss, n_alive
+        # collect_metrics: expose the cohort mean (already computed above)
+        # so the host can build the metric bundle eagerly AFTER the round —
+        # bundle math never runs inside this program, so the main outputs
+        # compile identically with metrics on or off (DESIGN.md §15)
+        aux = mean_model if collect_metrics else None
+        return new_storage, loss, n_alive, aux
 
     def finish_fused(storage, stacked, loss_c, alive):
         # Compressed-domain server round (§13): selected variables never
@@ -453,7 +470,9 @@ def make_round_fn(
             f, specs, storage, stacked,
             is_leaf=lambda s: isinstance(s, ParamSpec),
         )
-        return new_storage, loss, n_alive
+        # compressed-domain round: no f32 cohort mean exists — the host-side
+        # bundle degrades to the update norm (DESIGN.md §15)
+        return new_storage, loss, n_alive, None
 
     def body(storage, ids_per_tier, batches_per_tier, alive, round_index, ef):
         server_f32 = decompress_tree(storage)
@@ -481,22 +500,30 @@ def make_round_fn(
             lambda *xs: jnp.concatenate(xs, 0), *models
         )
         if fused_agg:
-            out = finish_fused(storage, stacked, jnp.concatenate(losses),
-                               alive)
+            new_storage, loss, n_alive, aux = finish_fused(
+                storage, stacked, jnp.concatenate(losses), alive
+            )
         else:
-            out = finish(server_f32, stacked, jnp.concatenate(losses), alive)
-        if not takes_ef:
-            return out
-        # scatter the cohort's updated residual rows back into the
-        # population state; dead clients keep their previous residual
-        # (they never uploaded — the loop path skips them entirely)
-        ids_all = jnp.concatenate(list(ids_per_tier), 0)
-        new_ef = {}
-        for k, old in ef.items():
-            nr = jnp.concatenate([r[k] for r in rows], 0)
-            keep = alive.reshape((-1,) + (1,) * (nr.ndim - 1))
-            new_ef[k] = old.at[ids_all].set(jnp.where(keep, nr, old[ids_all]))
-        return out + (new_ef,)
+            new_storage, loss, n_alive, aux = finish(
+                server_f32, stacked, jnp.concatenate(losses), alive
+            )
+        out: Tuple[Any, ...] = (new_storage, loss, n_alive)
+        if takes_ef:
+            # scatter the cohort's updated residual rows back into the
+            # population state; dead clients keep their previous residual
+            # (they never uploaded — the loop path skips them entirely)
+            ids_all = jnp.concatenate(list(ids_per_tier), 0)
+            new_ef = {}
+            for k, old in ef.items():
+                nr = jnp.concatenate([r[k] for r in rows], 0)
+                keep = alive.reshape((-1,) + (1,) * (nr.ndim - 1))
+                new_ef[k] = old.at[ids_all].set(
+                    jnp.where(keep, nr, old[ids_all])
+                )
+            out = out + (new_ef,)
+        if collect_metrics:
+            out = out + (aux,)
+        return out
 
     if data_mode == "vmap":
         if takes_ef:
@@ -573,6 +600,7 @@ def run_round_vectorized(
     ste: bool = False,
     ef=None,
     fused_agg: bool = False,
+    obs=None,
 ) -> Tuple[Any, Dict[str, float]]:
     """One vectorized round.  Returns (new server storage, metrics).
 
@@ -583,12 +611,22 @@ def run_round_vectorized(
     ``round_fn`` (from :func:`make_round_fn`) when looping — building it
     here costs a compile.  ``strategy``/``ste``/``ef`` mirror the loop path
     (§12); the error-feedback state dict is updated in place.
+
+    ``obs`` (a :class:`repro.obs.Obs` or None, DESIGN.md §15): when set
+    and ``obs.collect_metrics``, the round program additionally returns the
+    cohort mean it already computes, and the metric bundle (quantization
+    error, update norm, EF residual norm) is assembled eagerly on the host
+    AFTER the round — the compiled round math itself is untouched, so with
+    obs enabled the trained trees and ledgers stay bit/byte-identical to
+    ``obs=None`` (tier-1 gated).  A cached ``round_fn`` must have been
+    built with matching ``collect_metrics``.
     """
     takes_ef = simulate.ef_lib.takes_residual(omc, strategy)
+    collect = obs is not None and obs.collect_metrics
     if round_fn is None:
         round_fn = make_round_fn(family, cfg, specs, omc, sim, spec, data_fn,
                                  data_mode, strategy=strategy, ste=ste,
-                                 fused_agg=fused_agg)
+                                 fused_agg=fused_agg, collect_metrics=collect)
     if takes_ef and ef is None:
         raise ValueError(
             f"strategy {strategy.label!r} uses error feedback: pass the "
@@ -602,12 +640,34 @@ def run_round_vectorized(
         args.append(_host_batches(data_fn, ids_per_tier, round_index,
                                   sim.local_steps))
     args += [alive, jnp.int32(round_index)]
+    with null_span(obs, "round", round=int(round_index)):
+        res = round_fn(*args, ef) if takes_ef else round_fn(*args)
+    base = 4 if takes_ef else 3
+    mean_model = res[base] if len(res) > base else None
     if takes_ef:
-        new_storage, loss, n_alive, new_ef = round_fn(*args, ef)
+        new_storage, loss, n_alive, new_ef = res[:4]
         for k in ef:
             ef[k] = new_ef[k]
     else:
-        new_storage, loss, n_alive = round_fn(*args)
+        new_storage, loss, n_alive = res[:3]
+
+    bundle = None
+    if collect:
+        # eager host-side bundle from the round's outputs (DESIGN.md §15):
+        # the compiled program is never asked to compute metric values, so
+        # enabling obs cannot perturb the trained tree
+        bundle = obs_metrics.server_round_bundle(
+            specs, server_params, new_storage, mean_model, sim.server_lr,
+        )
+        bundle["loss"] = loss
+        bundle["alive"] = n_alive
+        if takes_ef:
+            ids_all = jnp.concatenate(
+                [jnp.asarray(i) for i in ids_per_tier], 0
+            )
+            bundle["ef_norm"] = obs_metrics.ef_rows_norm(
+                {k: v[ids_all] for k, v in ef.items()}
+            )
 
     n_alive = int(n_alive)
     metrics: Dict[str, float] = dict(
@@ -621,6 +681,8 @@ def run_round_vectorized(
                                ids_per_tier, alive, round_index,
                                strategy=strategy)
         )
+    if obs is not None:
+        obs.record("round", bundle, round=int(round_index), **metrics)
     return new_storage, metrics
 
 
@@ -677,6 +739,7 @@ def run_training_vectorized(
     ste: bool = False,
     ef=None,
     fused_agg: bool = False,
+    obs=None,
 ):
     """Vectorized mirror of :func:`repro.federated.simulate.run_training`.
 
@@ -686,14 +749,18 @@ def run_training_vectorized(
     accounting costs a host round-trip per client), the engine's batched
     accounting is a few ms per round, so it is on by default; pass
     ``wire=False`` for history rows schema-identical to the loop's default.
-    ``strategy``/``ste``/``ef`` mirror the loop path (§12).
+    ``strategy``/``ste``/``ef`` mirror the loop path (§12); ``obs``
+    attaches telemetry (§15) — a host-assembled metric bundle per round
+    plus a wall span per round (the round-0 span includes the XLA
+    compile).
     """
     specs = family.param_specs(cfg)
     params = family.init(init_key, cfg) if init_params is None else init_params
     storage = compress_params(params, specs, omc) if omc.enabled else params
+    collect = obs is not None and obs.collect_metrics
     round_fn = make_round_fn(family, cfg, specs, omc, sim, spec, data_fn,
                              data_mode, strategy=strategy, ste=ste,
-                             fused_agg=fused_agg)
+                             fused_agg=fused_agg, collect_metrics=collect)
     if ef is None and simulate.ef_lib.takes_residual(omc, strategy):
         ef = simulate.ef_lib.init_ef_state(params, specs, omc,
                                            spec.plan.num_clients)
@@ -704,7 +771,7 @@ def run_training_vectorized(
         storage, metrics = run_round_vectorized(
             family, cfg, specs, omc, sim, storage, data_fn, spec, r, key,
             round_fn=round_fn, wire_table=table, data_mode=data_mode,
-            strategy=strategy, ste=ste, ef=ef,
+            strategy=strategy, ste=ste, ef=ef, obs=obs,
         )
         if eval_fn is not None and (r + 1) % eval_every == 0:
             metrics["eval"] = float(eval_fn(decompress_tree(storage), r))

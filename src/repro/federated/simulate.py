@@ -55,6 +55,8 @@ from repro.core.partial import ppq_mask
 from repro.core.policy import path_str
 from repro.core.store import decompress_tree, is_compressed
 from repro.models.common import IDENTITY_MAT, ParamSpec
+from repro.obs import metrics as obs_metrics
+from repro.obs import null_span
 
 from . import accounting
 from . import cohort as cohort_lib
@@ -279,6 +281,7 @@ def run_round(
     strategy: Optional[CompressionStrategy] = None,
     ste: bool = False,
     ef=None,
+    obs=None,
 ) -> Tuple[Any, Dict[str, float]]:
     """One faithful federated round.  Returns (new server storage, metrics).
 
@@ -289,7 +292,10 @@ def run_round(
     equivalence tests.  ``strategy``/``ste`` train under a zoo compressor
     (§12); ``ef`` is the population error-feedback state
     (:func:`repro.compress.feedback.init_ef_state`), updated in place for
-    the surviving cohort rows."""
+    the surviving cohort rows.  ``obs`` (DESIGN.md §15) folds the same
+    metric bundle the engine emits into ``obs.sink`` — computed eagerly
+    here (this is the eager reference path), never altering the round's
+    own arithmetic."""
     server_f32 = decompress_tree(server_params)
     ids = cohort_lib.sample_cohort(key, plan, round_index)
     alive = cohort_lib.survival_mask(key, plan, round_index)
@@ -355,6 +361,18 @@ def run_round(
             * plan.cohort_size
         )
         metrics["up_bytes"] = int(up_bytes)
+    if obs is not None:
+        bundle = None
+        if obs.collect_metrics:
+            bundle = obs_metrics.server_round_bundle(
+                specs, server_f32, new_storage, mean_model, sim.server_lr
+            )
+            bundle["alive"] = jnp.float32(len(models))
+            if takes_ef:
+                bundle["ef_norm"] = obs_metrics.ef_rows_norm(
+                    {k: v[ids] for k, v in ef.items()}
+                )
+        obs.record("round", bundle, round=int(round_index), **metrics)
     return new_storage, metrics
 
 
@@ -369,6 +387,7 @@ def run_training(
     strategy: Optional[CompressionStrategy] = None,
     ste: bool = False,
     ef=None,
+    obs=None,
 ):
     """Full simulation loop.  Returns (final storage params, history).
 
@@ -389,11 +408,12 @@ def run_training(
     key = jax.random.fold_in(init_key, 0xC047)
     history = []
     for r in range(num_rounds):
-        storage, metrics = run_round(
-            family, cfg, specs, omc, sim, storage, data_fn, plan, r, key,
-            client_update=client_update, wire_table=wire_table,
-            strategy=strategy, ste=ste, ef=ef,
-        )
+        with null_span(obs, "round", round=r):
+            storage, metrics = run_round(
+                family, cfg, specs, omc, sim, storage, data_fn, plan, r, key,
+                client_update=client_update, wire_table=wire_table,
+                strategy=strategy, ste=ste, ef=ef, obs=obs,
+            )
         if eval_fn is not None and (r + 1) % eval_every == 0:
             metrics["eval"] = float(eval_fn(decompress_tree(storage), r))
         history.append(dict(round=r, **metrics))

@@ -11,12 +11,21 @@ It used to be a per-call function that swallowed every exception — inside a
 jit trace a probe failure silently returned False and could flip dispatch
 between retraces; now the decision is a module constant (regression-tested
 in tests/test_kernels.py::test_cpu_dispatch_hits_ref).
+
+Every branch also bumps a **dispatch counter** keyed ``(op, backend)``
+with backend ∈ {pallas, interpret, ref} (DESIGN.md §15).  The wrappers
+are jitted, so the bump executes at *trace* time: counts are per compiled
+specialization, not per call — exactly the right granularity for the
+regression question "did a CPU run silently trace the compiled path?".
+Read with :func:`dispatch_counts`; ``repro.obs`` embeds the counts in its
+run meta record.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from collections import Counter
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -39,12 +48,36 @@ def _probe_tpu() -> bool:
 
 _ON_TPU: bool = _probe_tpu()
 
+_DISPATCHES: Counter = Counter()
+
+
+def _record(op: str, backend: str) -> None:
+    _DISPATCHES[f"{op}.{backend}"] += 1
+
+
+def dispatch_counts() -> Dict[str, int]:
+    """``{"<op>.<backend>": traces}`` accumulated since import/reset."""
+    return dict(_DISPATCHES)
+
+
+def reset_dispatch_counts() -> None:
+    _DISPATCHES.clear()
+
+
+def _dispatch(op: str, force_interpret: bool) -> str:
+    """Pick + record the backend for one traced specialization."""
+    backend = ("pallas" if _ON_TPU
+               else "interpret" if force_interpret else "ref")
+    _record(op, backend)
+    return backend
+
 
 @functools.partial(jax.jit, static_argnames=("fmt", "force_interpret"))
 def quantize(x, fmt: FloatFormat, force_interpret: bool = False):
-    if _ON_TPU:
+    backend = _dispatch("quantize", force_interpret)
+    if backend == "pallas":
         return _q.quantize(x, fmt)
-    if force_interpret:
+    if backend == "interpret":
         return _q.quantize(x, fmt, interpret=True)
     return ref.ref_quantize(x, fmt)
 
@@ -52,18 +85,20 @@ def quantize(x, fmt: FloatFormat, force_interpret: bool = False):
 @functools.partial(jax.jit, static_argnames=("fmt", "force_interpret"))
 def dequantize(codes, fmt: FloatFormat, s=None, b=None,
                force_interpret: bool = False):
-    if _ON_TPU:
+    backend = _dispatch("dequantize", force_interpret)
+    if backend == "pallas":
         return _q.dequantize(codes, fmt, s, b)
-    if force_interpret:
+    if backend == "interpret":
         return _q.dequantize(codes, fmt, s, b, interpret=True)
     return ref.ref_dequantize(codes, fmt, s, b)
 
 
 @functools.partial(jax.jit, static_argnames=("fmt", "force_interpret"))
 def quantize_stats(x, fmt: FloatFormat, force_interpret: bool = False):
-    if _ON_TPU:
+    backend = _dispatch("quantize_stats", force_interpret)
+    if backend == "pallas":
         return _q.quantize_stats(x, fmt)
-    if force_interpret:
+    if backend == "interpret":
         return _q.quantize_stats(x, fmt, interpret=True)
     return ref.ref_quantize_stats(x, fmt)
 
@@ -73,9 +108,10 @@ def quantize_stats(x, fmt: FloatFormat, force_interpret: bool = False):
 def dequant_matmul(a, w_codes, fmt: FloatFormat, s=None, b=None,
                    bm: int = 256, bn: int = 256, bk: int = 256,
                    force_interpret: bool = False):
-    if _ON_TPU:
+    backend = _dispatch("dequant_matmul", force_interpret)
+    if backend == "pallas":
         return _dm.dequant_matmul(a, w_codes, fmt, s, b, bm=bm, bn=bn, bk=bk)
-    if force_interpret:
+    if backend == "interpret":
         return _dm.dequant_matmul(a, w_codes, fmt, s, b, bm=bm, bn=bn, bk=bk,
                                   interpret=True)
     return ref.ref_dequant_matmul(
@@ -88,9 +124,10 @@ def dequant_matmul(a, w_codes, fmt: FloatFormat, s=None, b=None,
 @functools.partial(jax.jit, static_argnames=("width", "force_interpret"))
 def pack_bits(codes, width: int, force_interpret: bool = False):
     """codes (values < 2**width) -> exact uint32 bitstream (wire form)."""
-    if _ON_TPU:
+    backend = _dispatch("pack_bits", force_interpret)
+    if backend == "pallas":
         return _bp.pack(codes, width)
-    if force_interpret:
+    if backend == "interpret":
         return _bp.pack(codes, width, interpret=True)
     return ref.ref_pack(codes, width)
 
@@ -98,9 +135,10 @@ def pack_bits(codes, width: int, force_interpret: bool = False):
 @functools.partial(jax.jit, static_argnames=("width", "n", "force_interpret"))
 def unpack_bits(words, width: int, n: int, force_interpret: bool = False):
     """Inverse of :func:`pack_bits`: recover ``n`` codes (uint32)."""
-    if _ON_TPU:
+    backend = _dispatch("unpack_bits", force_interpret)
+    if backend == "pallas":
         return _bp.unpack(words, width, n)
-    if force_interpret:
+    if backend == "interpret":
         return _bp.unpack(words, width, n, interpret=True)
     return ref.ref_unpack(words, width, n)
 
@@ -116,11 +154,12 @@ def fused_aggregate(srv_codes, srv_s, srv_b, cl_codes, cl_s, cl_b, weights,
     Returns (new_codes, s, b) — the aggregated server variable in storage
     form, without materializing f32 cohort state on the Pallas path.
     """
-    if _ON_TPU:
+    backend = _dispatch("fused_aggregate", force_interpret)
+    if backend == "pallas":
         out = _agg.fused_aggregate(srv_codes, srv_s, srv_b, cl_codes, cl_s,
                                    cl_b, weights, lr, fmt,
                                    batch_axes=batch_axes)
-    elif force_interpret:
+    elif backend == "interpret":
         out = _agg.fused_aggregate(srv_codes, srv_s, srv_b, cl_codes, cl_s,
                                    cl_b, weights, lr, fmt,
                                    batch_axes=batch_axes, interpret=True)

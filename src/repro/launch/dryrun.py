@@ -36,11 +36,16 @@ from repro.launch import specs as S
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, make_production_mesh
 from repro.models.common import activate_mesh
 from repro.models.registry import get_family
+from repro.obs.log import Logger
 from repro.optim import fedavg
 from repro.roofline.analysis import analyze_compiled, model_flops
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "experiments", "dryrun")
+
+# module-level so run_cell keeps its signature for programmatic callers;
+# main() rebinds it from --quiet
+log = Logger()
 
 
 def build_and_lower(arch_id: str, shape_name: str, *, multi_pod: bool = False,
@@ -151,15 +156,21 @@ def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool = False,
     path = os.path.join(od, f"{arch_id}_{shape_name}_{mesh_tag}{suffix}.json")
     with open(path, "w") as f:
         json.dump(result, f, indent=1)
-    print(f"OK {arch_id} x {shape_name} [{mesh_tag}] "
-          f"lower={t_lower:.0f}s compile={t_compile:.0f}s "
-          f"dominant={terms.dominant} "
-          f"terms=({terms.compute_s*1e3:.1f}, {terms.memory_s*1e3:.1f}, "
-          f"{terms.collective_s*1e3:.1f}) ms -> {path}")
+    log.result(
+        f"OK {arch_id} x {shape_name} [{mesh_tag}] "
+        f"lower={t_lower:.0f}s compile={t_compile:.0f}s "
+        f"dominant={terms.dominant} "
+        f"terms=({terms.compute_s*1e3:.1f}, {terms.memory_s*1e3:.1f}, "
+        f"{terms.collective_s*1e3:.1f}) ms -> {path}",
+        arch=arch_id, shape=shape_name, mesh=mesh_tag,
+        lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+        dominant=terms.dominant, path=path,
+    )
     return result
 
 
 def main():
+    global log
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None)
@@ -171,7 +182,10 @@ def main():
     ap.add_argument("--out-dir", default=None)
     ap.add_argument("--set", action="append", default=[],
                     help="config override key=value (repeatable)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress stderr text")
     args = ap.parse_args()
+    log = Logger(quiet=args.quiet)
     overrides = dict(s.split("=", 1) for s in args.set) or None
 
     if args.all:
@@ -180,7 +194,8 @@ def main():
             for shape_name, shape in SHAPES.items():
                 arch = get_arch(arch_id)
                 if shape.sub_quadratic_only and not arch.LONG_CONTEXT_OK:
-                    print(f"SKIP {arch_id} x {shape_name} (full attention)")
+                    log.warn(f"SKIP {arch_id} x {shape_name} (full attention)",
+                             arch=arch_id, shape=shape_name)
                     continue
                 try:
                     run_cell(arch_id, shape_name, multi_pod=args.multi_pod,
@@ -191,7 +206,7 @@ def main():
                     failures.append((arch_id, shape_name))
         if failures:
             raise SystemExit(f"FAILED cells: {failures}")
-        print("ALL CELLS PASSED")
+        log.result("ALL CELLS PASSED")
         return
     run_cell(args.arch, args.shape, multi_pod=args.multi_pod, fmt=args.fmt,
              fp32_baseline=args.fp32_baseline, out_dir=args.out_dir,

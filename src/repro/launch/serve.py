@@ -29,6 +29,7 @@ from repro.configs.registry import get_arch
 from repro.core.omc import OMCConfig
 from repro.federated.state import compress_params
 from repro.models.registry import get_family, is_servable
+from repro.obs.log import Logger
 
 
 def main():
@@ -42,7 +43,10 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--wire-roundtrip", action="store_true",
                     help="serialize weights through the wire codec first")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress stderr text")
     args = ap.parse_args()
+    log = Logger(quiet=args.quiet)
 
     arch = get_arch(args.arch)
     if not is_servable(arch.FAMILY):
@@ -59,8 +63,10 @@ def main():
         t0 = time.time()
         payload = encode_payload(storage)
         sess.hot_swap(payload)
-        print(f"wire roundtrip: {len(payload)} B payload in "
-              f"{(time.time() - t0) * 1e3:.1f} ms")
+        log.info(f"wire roundtrip: {len(payload)} B payload in "
+                 f"{(time.time() - t0) * 1e3:.1f} ms",
+                 payload_bytes=len(payload),
+                 roundtrip_ms=(time.time() - t0) * 1e3)
 
     b, s = args.batch, args.prompt_len
     toks = jax.random.randint(jax.random.fold_in(key, 1), (b, s), 0, cfg.vocab)
@@ -76,7 +82,8 @@ def main():
     t0 = time.time()
     cache, logits = jax.block_until_ready(sess.prefill(batch, cache))
     t_prefill = time.time() - t0
-    print(f"prefill [{b}x{s}] in {t_prefill * 1e3:.1f} ms")
+    log.info(f"prefill [{b}x{s}] in {t_prefill * 1e3:.1f} ms",
+             batch=b, prompt_len=s, prefill_ms=t_prefill * 1e3)
 
     out_tokens = []
     tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
@@ -87,10 +94,14 @@ def main():
         out_tokens.append(tok)
     jax.block_until_ready(tok)
     dt = time.time() - t0
-    print(f"decoded {args.gen} tokens x {b} seqs in {dt * 1e3:.1f} ms "
-          f"({args.gen * b / dt:.1f} tok/s, {dt / args.gen * 1e3:.2f} ms/tok)")
+    log.result(
+        f"decoded {args.gen} tokens x {b} seqs in {dt * 1e3:.1f} ms "
+        f"({args.gen * b / dt:.1f} tok/s, {dt / args.gen * 1e3:.2f} ms/tok)",
+        gen_tokens=args.gen, batch=b, decode_ms=dt * 1e3,
+        tok_per_s=args.gen * b / dt,
+    )
     gen = jnp.concatenate(out_tokens, axis=1)
-    print("sample token ids:", gen[0, :12].tolist())
+    log.info(f"sample token ids: {gen[0, :12].tolist()}")
 
 
 if __name__ == "__main__":

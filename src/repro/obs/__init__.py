@@ -1,0 +1,114 @@
+"""``repro.obs`` — telemetry for every training/serving path (DESIGN.md §15).
+
+One handle, three layers:
+
+  * **metrics** (:mod:`repro.obs.metrics`) — scalar bundles (loss,
+    per-leaf quant-error norms, EF residual norms, alive counts)
+    assembled host-side from program outputs and folded into a
+    :class:`~repro.obs.metrics.MetricsSink`,
+  * **tracing** (:mod:`repro.obs.trace`) — wall-clock spans (compile,
+    dispatch, flush, hot-swap) plus virtual-clock spans for the async
+    engine's simulated timeline,
+  * **export** (:mod:`repro.obs.export`) — JSONL event log +
+    Chrome-trace/Perfetto JSON under ``experiments/obs/``, rendered by
+    ``python -m repro.obs.report``.
+
+The contract every instrumented call site honors: ``obs=None`` (the
+default everywhere) must be a **true no-op** — no extra program outputs,
+no spans, no files — so the tier-1 bit-identity gates between paths are
+untouched; and with ``obs`` *enabled*, compiled round programs only
+expose values they already compute (the cohort mean) as extra outputs —
+all bundle math (update/quant-error/EF norms) runs **eagerly on the
+host** after the program returns, so the compiled round math is
+untouched and trained trees and wire ledgers stay bit/byte-identical
+(gated in tier-1).
+
+Typical use::
+
+    obs = Obs(run_name="engine_c8")
+    storage, hist = run_training_vectorized(..., obs=obs)
+    paths = obs.flush()          # experiments/obs/engine_c8.{obs.jsonl,perfetto.json}
+    # python -m repro.obs.report experiments/obs/engine_c8.obs.jsonl
+"""
+
+from __future__ import annotations
+
+import os
+from contextlib import contextmanager
+from typing import Any, Dict, Iterator, Optional
+
+from repro.obs.metrics import Bundle, MetricsSink
+from repro.obs.trace import Span, Tracer, maybe_span
+
+__all__ = [
+    "Obs", "MetricsSink", "Tracer", "Span", "Bundle",
+    "maybe_span", "null_span",
+]
+
+DEFAULT_OUT_DIR = os.path.join("experiments", "obs")
+
+
+class Obs:
+    """Per-run telemetry handle: a sink + a tracer + export plumbing.
+
+    ``metrics=False`` keeps the compiled programs bundle-free (spans
+    only); ``trace=False`` drops span recording.  Call sites must accept
+    ``obs=None`` and treat it as fully disabled.
+    """
+
+    def __init__(self, run_name: str = "run", out_dir: Optional[str] = None,
+                 *, metrics: bool = True, trace: bool = True) -> None:
+        self.run_name = str(run_name)
+        self.out_dir = out_dir if out_dir is not None else DEFAULT_OUT_DIR
+        self.sink = MetricsSink()
+        self.tracer: Optional[Tracer] = Tracer() if trace else None
+        self._metrics = bool(metrics)
+
+    @property
+    def collect_metrics(self) -> bool:
+        """Whether compiled programs should emit metric bundles."""
+        return self._metrics
+
+    def record(self, kind: str, bundle: Optional[Bundle] = None,
+               **fields: Any) -> Dict[str, Any]:
+        return self.sink.record(kind, bundle, **fields)
+
+    @contextmanager
+    def span(self, name: str, **args: Any) -> Iterator[Dict[str, Any]]:
+        with maybe_span(self.tracer, name, **args) as a:
+            yield a
+
+    def vspan(self, name: str, ts: float, dur: float, **args: Any) -> None:
+        if self.tracer is not None:
+            self.tracer.vspan(name, ts, dur, **args)
+
+    def flush(self) -> Dict[str, str]:
+        """Write the JSONL (+ Perfetto when tracing) artifacts; return paths.
+
+        Prepends a ``kind=meta`` record carrying the run name and the
+        kernel dispatch counters accumulated so far (``kernels/ops.py``),
+        so a single JSONL is a self-contained health record.
+        """
+        from repro.kernels import ops as kernel_ops
+        from repro.obs.export import export_run
+
+        meta = {
+            "kind": "meta",
+            "run": self.run_name,
+            "dispatch_counts": kernel_ops.dispatch_counts(),
+        }
+        return export_run(
+            self.out_dir, self.run_name,
+            [meta] + self.sink.records(), self.tracer,
+        )
+
+
+@contextmanager
+def null_span(obs: Optional[Obs], name: str,
+              **args: Any) -> Iterator[Dict[str, Any]]:
+    """``obs.span`` tolerant of ``obs=None`` — for instrumented call sites."""
+    if obs is None:
+        yield args
+    else:
+        with obs.span(name, **args) as a:
+            yield a

@@ -1,0 +1,54 @@
+"""Thin structured logger for CLIs (DESIGN.md §15 satellite).
+
+Replaces raw ``print()`` in the launch/demo entry points with one
+funnel: human-readable text on stderr (so artifact JSON on stdout stays
+machine-clean), plus an optional mirror into an :class:`Obs` sink as
+``kind=log`` JSONL records.  ``--quiet`` silences the text stream only —
+the JSONL record is cheap and always kept when a sink is attached.
+
+    log = Logger(quiet=args.quiet, obs=obs)
+    log.info("round complete", round=r, loss=loss)
+"""
+
+from __future__ import annotations
+
+import sys
+from typing import Any, Optional, TextIO
+
+
+class Logger:
+    """stderr text + optional structured mirror into an obs sink."""
+
+    def __init__(self, quiet: bool = False, obs: Optional[Any] = None,
+                 stream: Optional[TextIO] = None) -> None:
+        self.quiet = bool(quiet)
+        self.obs = obs
+        self.stream = stream if stream is not None else sys.stderr
+
+    def _emit(self, level: str, msg: str, **fields: Any) -> None:
+        if self.obs is not None:
+            self.obs.record("log", level=level, msg=msg, **fields)
+        if self.quiet:
+            return
+        if fields:
+            kv = " ".join(f"{k}={_fmt(v)}" for k, v in fields.items())
+            line = f"[{level}] {msg} {kv}"
+        else:
+            line = f"[{level}] {msg}"
+        print(line, file=self.stream)
+
+    def info(self, msg: str, **fields: Any) -> None:
+        self._emit("info", msg, **fields)
+
+    def warn(self, msg: str, **fields: Any) -> None:
+        self._emit("warn", msg, **fields)
+
+    def result(self, msg: str, **fields: Any) -> None:
+        """Final-outcome lines (kept terse; still silenced by --quiet)."""
+        self._emit("result", msg, **fields)
+
+
+def _fmt(v: Any) -> str:
+    if isinstance(v, float):
+        return f"{v:.6g}"
+    return str(v)

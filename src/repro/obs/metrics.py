@@ -1,0 +1,216 @@
+"""Round metric bundles, assembled OUTSIDE the compiled round programs.
+
+A **metric bundle** is a flat ``{name: f32 scalar}`` dict — a pytree of
+0-d arrays — computed from a round program's ordinary outputs
+(DESIGN.md §15).  The contract that makes it safe to leave on in
+production paths:
+
+  * the round program itself never gains metric math: with
+    ``collect_metrics=True`` it only exposes the cohort mean it already
+    computes as an extra output, and every derived statistic here runs
+    *after* the program returns, as a **separate** jitted helper — extra
+    consumers inside the round program would shift XLA fusion/FMA
+    boundaries and change the trained tree bitwise; a separate program
+    cannot (the tier-1 gate in ``tests/test_obs.py`` asserts
+    bit-identity with obs on vs off on every path),
+  * no host callbacks ride in the hot path: the bundle crosses the
+    device boundary once per round/flush (one ``device_get`` in
+    :func:`finalize_bundle`) and the host-side :class:`MetricsSink`
+    folds it into a record.
+
+Bundle keys (schema used by ``repro.obs.report``):
+
+  * ``loss`` / ``alive`` — the round's weighted loss and survivor count,
+  * ``update_norm`` — L2 of the applied server step (new − old, f32 view),
+  * ``qerr_norm`` — L2 of the server requantization error: what the
+    policy re-compress threw away this round (``qerr/<var>`` per leaf),
+  * ``ef_norm`` — L2 of the cohort's updated error-feedback residual rows
+    (only when training under an EF strategy, DESIGN.md §12).
+
+Helpers here only import :mod:`repro.core`, so every training path can
+depend on them without cycles.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import path_str
+from repro.core.store import decompress_tree, is_compressed
+from repro.models.common import ParamSpec
+
+Bundle = Dict[str, jax.Array]
+
+
+def tree_sq_sum(tree) -> jax.Array:
+    """Σ x² over every leaf of an f32 pytree (0-d f32)."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    tot = jnp.float32(0.0)
+    for x in leaves:
+        tot = tot + jnp.sum(jnp.square(x.astype(jnp.float32)))
+    return tot
+
+
+def _server_round_bundle_impl(
+    specs, old, new_storage, mean_model, server_lr: float,
+    per_leaf: bool,
+) -> Bundle:
+    old_f32 = decompress_tree(old)  # pass-through when already f32
+    new_f32 = decompress_tree(new_storage)
+    out: Bundle = {
+        "update_norm": jnp.sqrt(
+            tree_sq_sum(
+                jax.tree_util.tree_map(jnp.subtract, new_f32, old_f32)
+            )
+        )
+    }
+    if mean_model is None:
+        return out
+    ideal = jax.tree_util.tree_map(
+        lambda o, m: o + server_lr * (m - o), old_f32, mean_model
+    )
+    qerr_sq = jnp.float32(0.0)
+
+    def visit(path, spec, srv, new_leaf, ideal_leaf):
+        nonlocal qerr_sq
+        if not is_compressed(srv):
+            return srv  # exact leaves: requantization error is identically 0
+        sq = jnp.sum(jnp.square(new_leaf - ideal_leaf))
+        qerr_sq = qerr_sq + sq
+        if per_leaf:
+            out[f"qerr/{path_str(path)}"] = jnp.sqrt(sq)
+        return srv
+
+    jax.tree_util.tree_map_with_path(
+        visit, specs, new_storage, new_f32, ideal,
+        is_leaf=lambda s: isinstance(s, ParamSpec),
+    )
+    out["qerr_norm"] = jnp.sqrt(qerr_sq)
+    return out
+
+
+_BUNDLE_JIT_CACHE: Dict[Any, Any] = {}
+
+
+def _bundle_cache_key(specs, server_lr: float, per_leaf: bool,
+                      with_mean: bool):
+    paths = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda s: isinstance(s, ParamSpec)
+    )[0]
+    return (tuple(path_str(p) for p, _ in paths),
+            float(server_lr), bool(per_leaf), bool(with_mean))
+
+
+def server_round_bundle(
+    specs,
+    old,
+    new_storage,
+    mean_model,
+    server_lr: float,
+    *,
+    per_leaf: bool = True,
+) -> Bundle:
+    """Bundle for one server round (any path — loop, engine, async, tree).
+
+    ``old`` is the pre-round server tree — compressed storage or f32;
+    it is decompressed *inside* the jitted bundle program, so call sites
+    must not pay an eager per-leaf decompress.
+    ``mean_model`` is the f32 cohort mean the server interpolated toward;
+    the *ideal* (pre-requantization) new state is
+    ``old + lr·(mean − old)``, so per-variable ``qerr`` measures exactly
+    the error the policy re-compress introduced.  ``mean_model=None``
+    (compressed-domain flushes that never materialize a mean) degrades to
+    the update norm alone.
+
+    Compiled as its own jitted program, cached per (spec paths, lr,
+    per_leaf, mean-ness): this is what keeps the §15 overhead budget —
+    one dispatch per round instead of one per leaf op — while remaining
+    a *separate* program from the round itself, so the round's XLA
+    fusion (and therefore the trained tree) cannot be perturbed.
+    """
+    key = _bundle_cache_key(specs, server_lr, per_leaf, mean_model is not None)
+    fn = _BUNDLE_JIT_CACHE.get(key)
+    if fn is None:
+        if mean_model is None:
+            fn = jax.jit(lambda o, n: _server_round_bundle_impl(
+                specs, o, n, None, server_lr, per_leaf))
+        else:
+            fn = jax.jit(lambda o, n, m: _server_round_bundle_impl(
+                specs, o, n, m, server_lr, per_leaf))
+        _BUNDLE_JIT_CACHE[key] = fn
+    if mean_model is None:
+        return fn(old, new_storage)
+    return fn(old, new_storage, mean_model)
+
+
+def ef_rows_norm(rows: Optional[Dict[str, jax.Array]]) -> jax.Array:
+    """L2 over a cohort's updated EF residual rows (0 when EF is off)."""
+    if not rows:
+        return jnp.float32(0.0)
+    return jnp.sqrt(tree_sq_sum(rows))
+
+
+def chunk_partial_bundle(server_f32, stacked_masked, w) -> Bundle:
+    """Streamed-path partials (DESIGN.md §14): per-chunk weighted sums.
+
+    Returned by the fixed-capacity partial-aggregate program alongside
+    ``(Σ w·x, Σ w, Σ w·loss)``; :func:`fold_partial_bundles` reduces the
+    chunks and the round bundle is finished at the root combine.
+    ``update_sq_wsum`` is ``Σ_c w_c·‖model_c − server‖²`` — the cohort's
+    update dispersion, the quantity staleness-adaptive control needs.
+    """
+    tot = jnp.float32(0.0)
+    for s, x in zip(jax.tree_util.tree_leaves(server_f32),
+                    jax.tree_util.tree_leaves(stacked_masked)):
+        wb = w.reshape((-1,) + (1,) * (x.ndim - 1))
+        d = x - jnp.where(wb > 0, s[None], 0.0)
+        tot = tot + jnp.sum(jnp.square(d) * wb)
+    return {"update_sq_wsum": tot}
+
+
+def fold_partial_bundles(acc: Optional[Bundle], part: Bundle) -> Bundle:
+    if acc is None:
+        return dict(part)
+    return {k: acc[k] + part[k] for k in acc}
+
+
+def finalize_bundle(bundle: Bundle) -> Dict[str, float]:
+    """Host-side: materialize a device bundle into plain floats.
+
+    One ``device_get`` for the whole dict — a single transfer/sync per
+    record, not one blocking fetch per scalar.
+    """
+    return {k: float(v) for k, v in jax.device_get(bundle).items()}
+
+
+class MetricsSink:
+    """Host-side fold of per-round/per-event records (DESIGN.md §15).
+
+    One sink per run.  ``record(kind, ...)`` appends a plain-dict record
+    (bundles are materialized to floats here — the only device→host sync,
+    once per round); :meth:`records` hands the ordered list to the
+    exporters.  The sink never feeds anything back into training.
+    """
+
+    def __init__(self) -> None:
+        self._records: list[Dict[str, Any]] = []
+
+    def __len__(self) -> int:
+        return len(self._records)
+
+    def record(self, kind: str, bundle: Optional[Bundle] = None,
+               **fields: Any) -> Dict[str, Any]:
+        rec: Dict[str, Any] = {"kind": str(kind)}
+        rec.update(fields)
+        if bundle:
+            rec.update(finalize_bundle(bundle))
+        self._records.append(rec)
+        return rec
+
+    def records(self, kind: Optional[str] = None) -> list:
+        if kind is None:
+            return list(self._records)
+        return [r for r in self._records if r.get("kind") == kind]

@@ -1,0 +1,123 @@
+"""Span tracer: wall-clock and virtual-clock timing (DESIGN.md §15).
+
+Two clocks, one span type:
+
+  * **wall** spans time host-side phases — compile, dispatch, flush,
+    hot-swap, payload encode/decode — with ``time.perf_counter``.
+  * **virtual** spans carry the async engine's simulated clock: a client
+    round is a span at its check-in timestamp with the sampled latency as
+    duration.  Virtual spans are *constructed*, never timed — the async
+    event loop already knows both endpoints when the event fires.
+
+The tracer is append-only and cheap (one list append per span); export
+to Chrome-trace/Perfetto JSON lives in :mod:`repro.obs.export` so the
+hot path never touches the filesystem.
+"""
+
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterator, List, Optional
+
+#: span categories (the ``cat`` field) — keep in sync with DESIGN.md §15
+WALL = "wall"
+VIRTUAL = "virtual"
+
+
+@dataclass(frozen=True)
+class Span:
+    """One closed interval on either clock.
+
+    ``ts``/``dur`` are **seconds** on the span's own clock: wall spans use
+    the tracer's epoch (first span at ~0), virtual spans use the async
+    engine's simulated time directly.
+    """
+
+    name: str
+    ts: float
+    dur: float
+    cat: str = WALL
+    args: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def end(self) -> float:
+        return self.ts + self.dur
+
+
+class Tracer:
+    """Collects :class:`Span`\\ s for one run; thread-unsafe by design.
+
+    All recording funnels through :meth:`add`; :meth:`span` is the
+    wall-clock context manager and :meth:`vspan` the virtual-clock
+    constructor.  ``tracer=None`` call sites use
+    :func:`maybe_span`, which degrades to a no-op.
+    """
+
+    def __init__(self) -> None:
+        self._spans: List[Span] = []
+        self._epoch = time.perf_counter()
+
+    def __len__(self) -> int:
+        return len(self._spans)
+
+    def now(self) -> float:
+        """Seconds since this tracer's epoch (wall clock)."""
+        return time.perf_counter() - self._epoch
+
+    def add(self, span: Span) -> Span:
+        self._spans.append(span)
+        return span
+
+    @contextmanager
+    def span(self, name: str, **args: Any) -> Iterator[Dict[str, Any]]:
+        """Wall-clock span around a ``with`` body.
+
+        Yields the mutable ``args`` dict so the body can attach results
+        (e.g. byte counts) before the span closes.
+        """
+        t0 = self.now()
+        try:
+            yield args
+        finally:
+            self.add(Span(name=name, ts=t0, dur=self.now() - t0, args=args))
+
+    def vspan(self, name: str, ts: float, dur: float, **args: Any) -> Span:
+        """Record a virtual-clock span at simulated time ``ts``."""
+        return self.add(
+            Span(name=name, ts=float(ts), dur=float(dur), cat=VIRTUAL,
+                 args=args)
+        )
+
+    def spans(self, cat: Optional[str] = None,
+              name: Optional[str] = None) -> List[Span]:
+        out = self._spans
+        if cat is not None:
+            out = [s for s in out if s.cat == cat]
+        if name is not None:
+            out = [s for s in out if s.name == name]
+        return list(out)
+
+    def summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-(cat, name) count/total/mean seconds — the benchmark view."""
+        agg: Dict[str, Dict[str, float]] = {}
+        for s in self._spans:
+            key = f"{s.cat}:{s.name}"
+            rec = agg.setdefault(key, {"count": 0.0, "total_s": 0.0})
+            rec["count"] += 1
+            rec["total_s"] += s.dur
+        for rec in agg.values():
+            rec["mean_s"] = rec["total_s"] / max(rec["count"], 1.0)
+        return agg
+
+
+@contextmanager
+def maybe_span(tracer: Optional[Tracer], name: str,
+               **args: Any) -> Iterator[Dict[str, Any]]:
+    """``tracer.span(...)`` when tracing, else a free no-op (§15 rule)."""
+    if tracer is None:
+        yield args
+    else:
+        with tracer.span(name, **args) as a:
+            yield a

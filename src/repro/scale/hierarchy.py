@@ -44,6 +44,8 @@ from repro.federated import cohort as cohort_lib
 from repro.federated import engine, simulate
 from repro.federated.simulate import SimConfig
 from repro.federated.state import compress_params
+from repro.obs import metrics as obs_metrics
+from repro.obs import null_span
 
 from .store import PopulationStore, ShardLayout
 from .stream import iter_chunks, make_stream_fn, pad_chunk
@@ -85,6 +87,11 @@ def make_root_fn(specs, omc: OMCConfig, sim: SimConfig):
     (:func:`repro.federated.engine.apply_server_step`: interpolation with
     ``sim.server_lr`` + policy re-compress) — one requantization per round,
     matching the flat paths' error profile.
+
+    The round metric bundle (DESIGN.md §15) is *not* computed here:
+    :func:`run_round_sharded` assembles it eagerly on the host from the
+    same ``wsum``/``wtot`` accumulators, so this program is identical with
+    metrics on or off.
     """
 
     @jax.jit
@@ -128,6 +135,7 @@ def run_round_sharded(
     wire_table: Optional[accounting.WireTable] = None,
     ledger: Optional[accounting.StreamLedger] = None,
     on_chunk: Optional[Callable[[int, int, int], None]] = None,
+    obs=None,
 ) -> Tuple[Any, Dict[str, float]]:
     """One tree-aggregated round over a sharded population.
 
@@ -146,6 +154,13 @@ def run_round_sharded(
     the bounded-memory contract; ``on_chunk(shard, n_real, chunk_index)``
     is an instrumentation hook (the population benchmark samples live
     device bytes from it).
+
+    ``obs`` (DESIGN.md §15): chunk metric partials fold across shards and
+    the round bundle is assembled eagerly on the host from the same
+    ``wsum``/``wtot`` accumulators the root combine consumes; a cached
+    ``stream_fn`` must have been built with matching ``collect_metrics``
+    (``root_fn`` is metric-free either way).  ``obs=None`` leaves the
+    programs untouched.
     """
     takes_ef = simulate.ef_lib.takes_residual(omc, strategy)
     if plan.num_clients != layout.num_clients:
@@ -158,12 +173,14 @@ def run_round_sharded(
             f"strategy {strategy.label!r} uses error feedback: pass a "
             f"PopulationStore with init_ef() applied (DESIGN.md §14)"
         )
+    collect = obs is not None and obs.collect_metrics
     if capacity is None:
         capacity = min(plan.cohort_size, 64)
     if stream_fn is None:
         stream_fn = make_stream_fn(family, cfg, specs, omc, sim, data_fn,
                                    capacity, strategy=strategy, ste=ste,
-                                   fused_agg=fused_agg)
+                                   fused_agg=fused_agg,
+                                   collect_metrics=collect)
     if root_fn is None:
         root_fn = make_root_fn(specs, omc, sim)
 
@@ -176,6 +193,7 @@ def run_round_sharded(
     wsum = None
     wtot = jnp.float32(0.0)
     loss_wsum = jnp.float32(0.0)
+    chunk_bundles = None
     n_chunks = 0
     shards_used = 0
     r = jnp.int32(round_index)
@@ -189,18 +207,24 @@ def run_round_sharded(
                                 capacity)
             n_real = int(chunk_pos.size)
             if takes_ef:
-                rows = store.gather_ef(cids)
-                pw, pwt, pl, new_rows = stream_fn(
-                    server_params, jnp.asarray(cids), jnp.asarray(w), r, rows
+                res = stream_fn(
+                    server_params, jnp.asarray(cids), jnp.asarray(w), r,
+                    store.gather_ef(cids)
                 )
+                pw, pwt, pl, new_rows = res[:4]
                 real_rows = {
                     k: v[:n_real] for k, v in new_rows.items()
                 }
                 store.scatter_ef(cids[:n_real], real_rows,
                                  mask=alive_np[chunk_pos])
             else:
-                pw, pwt, pl = stream_fn(
+                res = stream_fn(
                     server_params, jnp.asarray(cids), jnp.asarray(w), r
+                )
+                pw, pwt, pl = res[:3]
+            if collect:
+                chunk_bundles = obs_metrics.fold_partial_bundles(
+                    chunk_bundles, res[-1]
                 )
             wsum = _add_trees(wsum, pw)
             wtot = wtot + pwt
@@ -214,6 +238,21 @@ def run_round_sharded(
     new_storage = root_fn(server_params, wsum, wtot)
     n_alive = int(alive_np.sum())
     loss = float(loss_wsum / jnp.maximum(wtot, 1.0))
+    bundle = None
+    if collect:
+        # eager host-side bundle (DESIGN.md §15): the same accumulators the
+        # root combine consumed yield the cohort mean, so no metric math
+        # ever runs inside a compiled program
+        mean = jax.tree_util.tree_map(
+            lambda p: p / jnp.maximum(wtot, 1e-9), wsum
+        )
+        bundle = obs_metrics.server_round_bundle(
+            specs, server_params, new_storage, mean, sim.server_lr,
+        )
+        bundle["loss"] = jnp.float32(loss)
+        bundle["alive"] = jnp.float32(n_alive)
+        if chunk_bundles is not None:
+            bundle.update(chunk_bundles)
     if store is not None:
         store.note_round(ids_np, alive_np)
     metrics: Dict[str, Any] = dict(
@@ -229,6 +268,8 @@ def run_round_sharded(
             engine.round_wire_metrics(wire_table, omc, [omc], [ids], alive,
                                       round_index, strategy=strategy)
         )
+    if obs is not None:
+        obs.record("round", bundle, round=int(round_index), **metrics)
     return new_storage, metrics
 
 
@@ -251,6 +292,7 @@ def run_training_sharded(
     wire: bool = True,
     init_params=None,
     log: Optional[Callable[[str], None]] = None,
+    obs=None,
 ) -> Tuple[Any, List[Dict[str, Any]], Optional[accounting.StreamLedger]]:
     """Sharded mirror of :func:`repro.federated.engine.run_training_vectorized`.
 
@@ -271,9 +313,10 @@ def run_training_sharded(
     if takes_ef and store is None:
         store = PopulationStore(layout)
         store.init_ef(params, specs, omc)
+    collect = obs is not None and obs.collect_metrics
     stream_fn = make_stream_fn(family, cfg, specs, omc, sim, data_fn,
                                capacity, strategy=strategy, ste=ste,
-                               fused_agg=fused_agg)
+                               fused_agg=fused_agg, collect_metrics=collect)
     root_fn = make_root_fn(specs, omc, sim)
     table = accounting.build_wire_table(params, specs, omc) if wire else None
     ledger = (
@@ -283,12 +326,14 @@ def run_training_sharded(
     key = jax.random.fold_in(init_key, 0xC047)
     history: List[Dict[str, Any]] = []
     for r in range(num_rounds):
-        storage, metrics = run_round_sharded(
-            family, cfg, specs, omc, sim, storage, data_fn, plan, layout,
-            r, key, capacity=capacity, stream_fn=stream_fn, root_fn=root_fn,
-            strategy=strategy, ste=ste, fused_agg=fused_agg, store=store,
-            wire_table=table, ledger=ledger,
-        )
+        with null_span(obs, "round", round=r):
+            storage, metrics = run_round_sharded(
+                family, cfg, specs, omc, sim, storage, data_fn, plan, layout,
+                r, key, capacity=capacity, stream_fn=stream_fn,
+                root_fn=root_fn, strategy=strategy, ste=ste,
+                fused_agg=fused_agg, store=store,
+                wire_table=table, ledger=ledger, obs=obs,
+            )
         history.append(dict(round=r, **metrics))
         if log and ((r + 1) % 10 == 0 or r == 0):
             log(f"round {r + 1}/{num_rounds}: " +

@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import null_span
+
 
 def _percentile(xs: List[float], q: float) -> float:
     return float(np.percentile(np.asarray(xs, np.float64), q)) if xs else 0.0
@@ -51,6 +53,7 @@ def run_serve_under_swap(
     max_len: int = 32,
     decode_steps: int = 4,
     warmup_queries: int = 2,
+    obs=None,
 ) -> Dict[str, Any]:
     """Interleave query traffic with payload hot-swaps; return latency stats.
 
@@ -60,6 +63,9 @@ def run_serve_under_swap(
     generate calls built by ``make_query(query_index)``.  Every latency is
     wall time to *materialized tokens* (``block_until_ready``), so jit
     cache hits and misses are both visible.
+
+    ``obs`` (DESIGN.md §15) records a wall span per query and per
+    hot-swap plus one ``kind=serve`` record carrying the returned stats.
     """
     if queries_per_swap < 1:
         raise ValueError(
@@ -73,8 +79,9 @@ def run_serve_under_swap(
         nonlocal qi
         cache = session.init_cache(batch, max_len)
         t0 = time.perf_counter()
-        _, toks = session.generate(make_query(qi), cache, decode_steps)
-        toks.block_until_ready()
+        with null_span(obs, "query", index=qi):
+            _, toks = session.generate(make_query(qi), cache, decode_steps)
+            toks.block_until_ready()
         ms = (time.perf_counter() - t0) * 1e3
         qi += 1
         if record is not None:
@@ -88,12 +95,13 @@ def run_serve_under_swap(
     for payload in payloads:
         for _ in range(queries_per_swap - 1):
             one_query(q_ms)
-        session.hot_swap(payload)
+        with null_span(obs, "hot_swap", swap=int(session.swaps)):
+            session.hot_swap(payload)
         first_after_swap_ms.append(one_query(q_ms))
 
     p50 = _percentile(q_ms, 50)
     stats = session.serve_stats()
-    return dict(
+    result = dict(
         queries=len(q_ms),
         swaps=int(session.swaps - swaps_before),
         query_ms_p50=p50,
@@ -107,3 +115,6 @@ def run_serve_under_swap(
             _percentile(first_after_swap_ms, 50) / p50 if p50 > 0 else 0.0
         ),
     )
+    if obs is not None:
+        obs.record("serve", **result)
+    return result

@@ -42,6 +42,7 @@ from repro.federated import engine, simulate
 from repro.federated.simulate import SimConfig
 from repro.federated.state import n_stack_axes
 from repro.models.common import ParamSpec
+from repro.obs import metrics as obs_metrics
 
 
 def pad_chunk(client_ids, alive, capacity: int
@@ -67,7 +68,8 @@ def pad_chunk(client_ids, alive, capacity: int
 def make_stream_fn(family, cfg, specs, omc: OMCConfig, sim: SimConfig,
                    data_fn, capacity: int, *, strategy=None,
                    ste: bool = False, fused_agg: bool = False,
-                   takes_residual: Optional[bool] = None):
+                   takes_residual: Optional[bool] = None,
+                   collect_metrics: bool = False):
     """Build the compiled fixed-capacity partial-aggregate program.
 
     Jitted ``(storage, cids[cap], w[cap], round_index) ->
@@ -83,6 +85,14 @@ def make_stream_fn(family, cfg, specs, omc: OMCConfig, sim: SimConfig,
     synthetic tasks and partitioned batch fns are).  One program instance
     serves every chunk of every shard of every round — capacity is the
     only shape.
+
+    ``collect_metrics=True`` (DESIGN.md §15) appends a per-chunk metric
+    *partial* bundle (``update_sq_wsum`` — the cohort's weighted update
+    dispersion) as the program's final output; the caller folds chunk
+    partials with :func:`repro.obs.metrics.fold_partial_bundles` and the
+    round-level bundle is finished at the root combine.  Off by default:
+    the program signature is unchanged and the main outputs are
+    bit-identical either way (tier-1 gated in tests/test_obs.py).
     """
     if capacity < 1:
         raise ValueError(f"capacity must be >= 1, got {capacity}")
@@ -123,7 +133,18 @@ def make_stream_fn(family, cfg, specs, omc: OMCConfig, sim: SimConfig,
             is_leaf=lambda s: isinstance(s, ParamSpec),
         )
         loss_wsum = (jnp.where(mask, losses, 0.0) * w).sum()
-        return wsum, w.sum(), loss_wsum
+        bundle = None
+        if collect_metrics:
+            masked = jax.tree_util.tree_map(
+                lambda x: jnp.where(
+                    mask.reshape((-1,) + (1,) * (x.ndim - 1)), x, 0.0
+                ),
+                stacked,
+            )
+            bundle = obs_metrics.chunk_partial_bundle(
+                decompress_tree(storage), masked, w
+            )
+        return wsum, w.sum(), loss_wsum, bundle
 
     def train(storage, cids, round_index, ef_rows):
         server_f32 = decompress_tree(storage)
@@ -143,14 +164,18 @@ def make_stream_fn(family, cfg, specs, omc: OMCConfig, sim: SimConfig,
         @jax.jit
         def stream_fn_ef(storage, cids, w, round_index, ef_rows):
             models, losses, rows = train(storage, cids, round_index, ef_rows)
-            return partials(storage, models, losses, w) + (rows,)
+            wsum, wtot, lw, bundle = partials(storage, models, losses, w)
+            out = (wsum, wtot, lw, rows)
+            return out + (bundle,) if collect_metrics else out
 
         return stream_fn_ef
 
     @jax.jit
     def stream_fn(storage, cids, w, round_index):
         models, losses = train(storage, cids, round_index, None)
-        return partials(storage, models, losses, w)
+        wsum, wtot, lw, bundle = partials(storage, models, losses, w)
+        out = (wsum, wtot, lw)
+        return out + (bundle,) if collect_metrics else out
 
     return stream_fn
 

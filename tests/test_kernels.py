@@ -180,12 +180,42 @@ def test_cpu_dispatch_hits_ref(monkeypatch):
     real = ref.ref_pack
     monkeypatch.setattr(ref, "ref_pack",
                         lambda c, w: calls.append(w) or real(c, w))
+    ops.reset_dispatch_counts()
     # fresh (shape, width) -> fresh trace of the jit'd wrapper -> the spy
     # fires iff the CPU branch routes through the ref oracle
     codes = jnp.arange(9973, dtype=jnp.uint32) & np.uint32(0x7FF)
     got = ops.pack_bits(codes, 11)
     assert calls == [11], "CPU dispatch did not route through kernels/ref.py"
     np.testing.assert_array_equal(np.asarray(got), np.asarray(real(codes, 11)))
+    # the dispatch counter (DESIGN.md §15) agrees with the spy: the trace
+    # was counted against the ref backend and never against pallas
+    counts = ops.dispatch_counts()
+    assert counts.get("pack_bits.ref") == 1, counts
+    assert not any(k.endswith(".pallas") for k in counts), counts
+
+
+def test_dispatch_counter_counts_traces_not_calls():
+    """Counts are per compiled specialization: repeat calls with the same
+    shape hit the jit cache and add nothing; a new shape retraces.  Prime
+    sizes keep the specializations fresh regardless of test order."""
+    if ops._ON_TPU:
+        pytest.skip("backend split differs on TPU")
+    ops.reset_dispatch_counts()
+    codes = jnp.arange(1013, dtype=jnp.uint32) & np.uint32(0xF)
+    ops.pack_bits(codes, 4)
+    first = ops.dispatch_counts()
+    assert first.get("pack_bits.ref") == 1, first
+    ops.pack_bits(codes, 4)  # cache hit: no retrace, no count
+    assert ops.dispatch_counts() == first
+    ops.pack_bits(jnp.arange(1031, dtype=jnp.uint32) & np.uint32(0xF), 4)
+    assert ops.dispatch_counts()["pack_bits.ref"] == 2
+    # interpret mode is its own backend bucket, never 'ref'
+    words = ops.pack_bits(jnp.arange(1013, dtype=jnp.uint32) & np.uint32(0x3F),
+                          6)
+    ops.unpack_bits(words, 6, 1013, force_interpret=True)
+    counts = ops.dispatch_counts()
+    assert counts.get("unpack_bits.interpret") == 1, counts
+    assert "unpack_bits.ref" not in counts, counts
 
 
 def test_interpret_dispatch_runs_kernel_body(monkeypatch):
